@@ -1,0 +1,91 @@
+"""Exp-9 (Fig. 10): ablation — swap out either the graph construction or the
+search algorithm:
+
+  δ-EMG-NSG  : error-bounded search (Alg. 3) on an NSG graph
+  δ-EMG-GS   : plain greedy search (Alg. 1) on the δ-EMG graph
+  δ-EMQG-NSG : probing search (Alg. 5) on a quantized NSG graph
+  δ-EMQG-AGS : approximate greedy search on the δ-EMQG
+vs the full systems."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    SearchParams,
+    ags_search,
+    error_bounded_probing_search,
+    error_bounded_search,
+    from_graph,
+    greedy_search,
+)
+
+from . import common
+from .common import corpus, emit, index_baseline, index_emg, index_emqg, recall, timed_qps
+
+K = 10
+ALPHAS = (1.0, 1.3, 2.0, 3.0)
+WIDTHS = (16, 48, 96)
+
+
+def _curve_alpha(search_fn, q, gt_i):
+    rows = []
+    for a in ALPHAS:
+        qps, res = timed_qps(lambda qq, aa=a: search_fn(qq, aa), q)
+        rows.append({"param": a, "recall": recall(res.ids, gt_i, K), "qps": qps})
+    return rows
+
+
+def _curve_width(search_fn, q, gt_i):
+    rows = []
+    for l in WIDTHS:
+        qps, res = timed_qps(lambda qq, ll=l: search_fn(qq, ll), q)
+        rows.append({"param": l, "recall": recall(res.ids, gt_i, K), "qps": qps})
+    return rows
+
+
+def run() -> dict:
+    base, queries, gt_d, gt_i = corpus()
+    q = jnp.asarray(queries)
+    g_emg = index_emg()
+    idx_emqg = index_emqg()
+    g_nsg = index_baseline("nsg")
+    idx_nsg_q = from_graph(g_nsg)
+
+    out = {
+        "delta-emg (full)": _curve_alpha(
+            lambda qq, a: error_bounded_search(g_emg, qq, k=K, alpha=a,
+                                               l_max=192), q, gt_i),
+        "delta-emg-nsg": _curve_alpha(
+            lambda qq, a: error_bounded_search(g_nsg, qq, k=K, alpha=a,
+                                               l_max=192), q, gt_i),
+        "delta-emg-gs": _curve_width(
+            lambda qq, l: greedy_search(g_emg, qq, k=K, l=l), q, gt_i),
+        "delta-emqg (full)": _curve_alpha(
+            lambda qq, a: error_bounded_probing_search(
+                idx_emqg, qq, k=K, alpha=a, l_max=192), q, gt_i),
+        "delta-emqg-nsg": _curve_alpha(
+            lambda qq, a: error_bounded_probing_search(
+                idx_nsg_q, qq, k=K, alpha=a, l_max=192), q, gt_i),
+        "delta-emqg-ags": _curve_width(
+            lambda qq, l: ags_search(
+                idx_emqg, qq, SearchParams(k=K, l0=l, l_max=l, adaptive=False,
+                                           max_hops=1024)), q, gt_i),
+    }
+    for name, rows in out.items():
+        ok = [r for r in rows if r["recall"] >= 0.9]
+        if ok:
+            best = max(ok, key=lambda r: r["qps"])
+            emit(f"exp9_{name.replace(' ', '_')}", 1e6 / best["qps"],
+                 f"recall={best['recall']:.3f}")
+        else:
+            best = max(rows, key=lambda r: r["recall"])
+            emit(f"exp9_{name.replace(' ', '_')}", 0.0,
+                 f"max_recall={best['recall']:.3f} (<0.9)")
+    common.save_json("exp9_ablation", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

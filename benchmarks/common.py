@@ -1,0 +1,109 @@
+"""Shared benchmark substrate: corpora, index cache, timing, CSV rows.
+
+Scale note: the container is CPU-only, so ANN benchmarks run on a synthetic
+SIFT-like corpus (clustered, LID-comparable) at n≈4–16k instead of SIFT1M,
+and wall-clock numbers are CPU proxies — the *reproducible* claims are the
+relative orderings and the recall/error/#distance-computation curves, which
+are hardware-independent.  Absolute QPS for the paper's setting comes from
+the roofline analysis of the dry-run (§Roofline).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    BuildParams,
+    SearchParams,
+    baselines,
+    build_approx,
+    build_emqg,
+)
+from repro.core.distances import brute_force_knn
+from repro.data import clustered_vectors
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+N_BASE = int(os.environ.get("BENCH_N", 4000))
+N_QUERY = int(os.environ.get("BENCH_Q", 200))
+DIM = int(os.environ.get("BENCH_D", 32))
+N_CLUSTERS = 48
+K_GT = 100
+
+M_DEG = 24
+BEAM = 64
+T_PARAM = 32
+ITERS = 3
+
+
+@lru_cache(maxsize=None)
+def corpus(n=N_BASE, dim=DIM, seed=0):
+    base = clustered_vectors(n, dim, N_CLUSTERS, seed=seed)
+    queries = clustered_vectors(N_QUERY, dim, N_CLUSTERS, seed=seed + 1)
+    gt_d, gt_i = brute_force_knn(queries, base, K_GT)
+    return base, queries, gt_d, gt_i
+
+
+@lru_cache(maxsize=None)
+def index_emg(n=N_BASE, delta=None, t=T_PARAM, M=M_DEG, beam=BEAM, iters=ITERS):
+    base, *_ = corpus(n)
+    return build_approx(base, BuildParams(
+        max_degree=M, beam_width=beam, t=t, iters=iters, delta=delta,
+        block=512))
+
+
+@lru_cache(maxsize=None)
+def index_emqg(n=N_BASE, delta=None, t=T_PARAM, M=M_DEG, beam=BEAM, iters=2):
+    base, *_ = corpus(n)
+    return build_emqg(base, BuildParams(
+        max_degree=M, beam_width=beam, t=t, iters=iters, delta=delta,
+        block=512, align_degree=True))
+
+
+@lru_cache(maxsize=None)
+def index_baseline(kind: str, n=N_BASE, M=M_DEG, beam=BEAM):
+    base, *_ = corpus(n)
+    if kind == "knn":
+        return baselines.build_knn_graph(base, k=M)
+    if kind == "nsw":
+        return baselines.build_nsw(base, max_degree=M, ef=beam)
+    return baselines.BUILDERS[kind](base, max_degree=M, beam_width=beam)
+
+
+def recall(ids, gt_i, k) -> float:
+    ids = np.asarray(ids)[:, :k]
+    return float(np.mean([
+        len(set(ids[i].tolist()) & set(gt_i[i, :k].tolist())) / k
+        for i in range(ids.shape[0])
+    ]))
+
+
+def timed_qps(fn, queries, repeats=3):
+    """Wall-clock QPS proxy (jit-warmed, best of `repeats`)."""
+    out = fn(queries)                          # warm / trace
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(queries)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return queries.shape[0] / best, out
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def save_json(name: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path

@@ -1,0 +1,57 @@
+"""Exp-2 (Fig. 4): index construction time + memory footprint per method."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import BuildParams, baselines, build_approx, build_emqg
+from repro.core.emqg import from_graph, memory_footprint
+
+from . import common
+from .common import BEAM, M_DEG, T_PARAM, corpus, emit
+
+
+def _graph_bytes(g) -> int:
+    return int(g.vectors.size * 4 + g.neighbors.size * 4)
+
+
+def run() -> dict:
+    base, *_ = corpus()
+    out = {}
+    builders = {
+        "delta-emg": lambda: build_approx(base, BuildParams(
+            max_degree=M_DEG, beam_width=BEAM, t=T_PARAM, iters=3, block=512)),
+        "delta-emqg": lambda: build_emqg(base, BuildParams(
+            max_degree=M_DEG, beam_width=BEAM, t=T_PARAM, iters=2, block=512,
+            align_degree=True)),
+        "nsg": lambda: baselines.build_nsg(base, max_degree=M_DEG,
+                                           beam_width=BEAM),
+        "tau_mg": lambda: baselines.build_taumg(base, max_degree=M_DEG,
+                                                beam_width=BEAM),
+        "vamana": lambda: baselines.build_vamana(base, max_degree=M_DEG,
+                                                 beam_width=BEAM),
+        "nsw": lambda: baselines.build_nsw(base, max_degree=M_DEG, ef=BEAM),
+        "knn": lambda: baselines.build_knn_graph(base, k=M_DEG),
+    }
+    for name, fn in builders.items():
+        t0 = time.perf_counter()
+        idx = fn()
+        dt = time.perf_counter() - t0
+        if name == "delta-emqg":
+            size = sum(memory_footprint(idx).values())
+            g = idx.graph
+        else:
+            size = _graph_bytes(idx)
+            g = idx
+        deg = float(np.asarray(g.degrees()).mean())
+        out[name] = {"build_s": dt, "bytes": size, "mean_degree": deg}
+        emit(f"exp2_build_{name}", dt * 1e6,
+             f"bytes={size};mean_deg={deg:.1f}")
+    common.save_json("exp2_construction", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,70 @@
+"""Exp-5 (Fig. 7): distance computations vs Relative Distance Error.
+
+RDE = mean_i (d(q, r_(i)) − d(q, v_(i))) / d(q, v_(i)) — the paper's
+error-bounded metric; δ-EMG should reach a given RDE with fewer distance
+computations than the non-quantized baselines."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import error_bounded_search, greedy_search
+
+from . import common
+from .common import corpus, emit, index_baseline, index_emg
+
+K = 10
+ALPHAS = (1.0, 1.1, 1.4, 2.5, 4.0)
+WIDTHS = (16, 40, 96, 160)
+
+
+def _rde(dists, gt_d, k=K) -> float:
+    d = np.asarray(dists)[:, :k]
+    g = gt_d[:, :k]
+    return float(np.mean((d - g) / np.maximum(g, 1e-9)))
+
+
+def run() -> dict:
+    base, queries, gt_d, gt_i = corpus()
+    q = jnp.asarray(queries)
+    out = {}
+
+    rows = []
+    g = index_emg()
+    for alpha in ALPHAS:
+        res = error_bounded_search(g, q, k=K, alpha=alpha, l_max=256)
+        rows.append({"param": alpha,
+                     "rde": _rde(res.dists, gt_d),
+                     "ndist": float(np.mean(np.asarray(res.n_dist_comps)))})
+    out["delta-emg"] = rows
+
+    for kind in ("nsg", "tau_mg", "vamana", "nsw", "knn"):
+        gb = index_baseline(kind)
+        rows = []
+        for l in WIDTHS:
+            res = greedy_search(gb, q, k=K, l=l)
+            rows.append({"param": l,
+                         "rde": _rde(res.dists, gt_d),
+                         "ndist": float(np.mean(np.asarray(res.n_dist_comps)))})
+        out[kind] = rows
+
+    # headline: #dist-comps needed for RDE ≤ 1e-2 (this corpus's floor sits
+    # near 3e-3 at the swept widths; the paper's 1e-3 region needs its
+    # 1M-point corpora)
+    for method, rows in out.items():
+        ok = [r for r in rows if r["rde"] <= 1e-2]
+        if ok:
+            best = min(ok, key=lambda r: r["ndist"])
+            emit(f"exp5_ndist_at_rde1e-2_{method}", best["ndist"],
+                 f"rde={best['rde']:.2e}")
+        else:
+            best = min(rows, key=lambda r: r["rde"])
+            emit(f"exp5_ndist_at_rde1e-2_{method}", 0.0,
+                 f"min_rde={best['rde']:.2e} (unreached)")
+    common.save_json("exp5_error_analysis", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

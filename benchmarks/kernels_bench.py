@@ -1,0 +1,69 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU) vs jnp reference —
+correctness-at-scale plus a CPU wall-clock proxy.  The real perf claim for
+kernels is structural (BlockSpec tiling, §Roofline); these numbers guard
+against regressions in the wrappers."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.bitdot.ops import bitdot, fused_estimate
+from repro.kernels.l2dist.ops import batched_l2
+
+from .common import emit, save_json
+
+
+def _time(fn, *args, repeats=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    out = {}
+
+    B, M, d = 64, 64, 128
+    rows = jnp.asarray(rng.normal(size=(B, M, d)).astype(np.float32))
+    qs = jnp.asarray(rng.normal(size=(B, d)).astype(np.float32))
+    t_ref, o_ref = _time(lambda r, q: batched_l2(r, q, use_ref=True), rows, qs)
+    t_pal, o_pal = _time(batched_l2, rows, qs)
+    err = float(jnp.max(jnp.abs(o_ref - o_pal)))
+    out["batched_l2"] = {"ref_s": t_ref, "pallas_interpret_s": t_pal, "maxerr": err}
+    emit("kernel_batched_l2_ref", t_ref * 1e6, f"B{B}xM{M}xd{d}")
+    emit("kernel_batched_l2_pallas", t_pal * 1e6, f"maxerr={err:.1e}")
+
+    m, dim = 4096, 128
+    W = dim // 32
+    codes = jnp.asarray(rng.integers(0, 2**32, (m, W), dtype=np.uint64).astype(np.uint32))
+    q = jnp.asarray(rng.normal(size=(dim,)).astype(np.float32))
+    t_ref, s_ref = _time(lambda c, qq: bitdot(c, qq, use_ref=True), codes, q)
+    t_pal, s_pal = _time(bitdot, codes, q)
+    err = float(jnp.max(jnp.abs(s_ref - s_pal)))
+    out["bitdot"] = {"ref_s": t_ref, "pallas_interpret_s": t_pal, "maxerr": err}
+    emit("kernel_bitdot_ref", t_ref * 1e6, f"m{m}xd{dim}")
+    emit("kernel_bitdot_pallas", t_pal * 1e6, f"maxerr={err:.1e}")
+
+    norms = jnp.asarray((0.5 + np.abs(rng.normal(size=m))).astype(np.float32))
+    ipxo = jnp.asarray((0.5 + 0.4 * rng.random(m)).astype(np.float32))
+    t_f, o_f = _time(lambda c, qq: fused_estimate(c, norms, ipxo, qq,
+                                                  jnp.float32(1.5), dim),
+                     codes, q)
+    out["fused_estimate"] = {"pallas_interpret_s": t_f}
+    emit("kernel_fused_estimate", t_f * 1e6, f"m{m}xd{dim}")
+    save_json("kernels_bench", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

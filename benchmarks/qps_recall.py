@@ -1,0 +1,78 @@
+"""Exp-1 (Fig. 3): QPS vs recall across methods, k ∈ {1, 10, 100}.
+
+δ-EMG / δ-EMQG sweep the accuracy parameter α; the baselines sweep their
+search width l — exactly the paper's protocol."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    SearchParams,
+    error_bounded_probing_search,
+    error_bounded_search,
+    greedy_search,
+)
+
+from . import common
+from .common import corpus, emit, index_baseline, index_emg, index_emqg, recall, timed_qps
+
+ALPHAS = (1.0, 1.1, 1.4, 2.0, 3.0)
+WIDTHS = (16, 40, 96)
+
+
+def run(k_values=(1, 10)) -> dict:  # k=100 representable; 1-core trace cost prohibitive
+    base, queries, gt_d, gt_i = corpus()
+    q = jnp.asarray(queries)
+    results = {}
+
+    for k in k_values:
+        rows = []
+        g = index_emg()
+        for alpha in ALPHAS:
+            qps, res = timed_qps(
+                lambda qq, a=alpha: error_bounded_search(
+                    g, qq, k=k, alpha=a, l_max=max(192, 2 * k)), q)
+            rows.append({"method": "delta-emg", "param": alpha,
+                         "recall": recall(res.ids, gt_i, k), "qps": qps,
+                         "ndist": float(np.mean(np.asarray(res.n_dist_comps)))})
+        idx = index_emqg()
+        for alpha in ALPHAS:
+            qps, res = timed_qps(
+                lambda qq, a=alpha: error_bounded_probing_search(
+                    idx, qq, k=k, alpha=a, l_max=max(192, 2 * k)), q)
+            rows.append({"method": "delta-emqg", "param": alpha,
+                         "recall": recall(res.ids, gt_i, k), "qps": qps,
+                         "ndist": float(np.mean(np.asarray(res.n_dist_comps)))})
+        for kind in ("nsg", "tau_mg", "vamana", "nsw", "knn"):
+            gb = index_baseline(kind)
+            for l in WIDTHS:
+                if l < k:
+                    continue
+                qps, res = timed_qps(
+                    lambda qq, ll=l, gg=gb: greedy_search(gg, qq, k=k, l=ll), q)
+                rows.append({"method": kind, "param": l,
+                             "recall": recall(res.ids, gt_i, k), "qps": qps,
+                             "ndist": float(np.mean(np.asarray(res.n_dist_comps)))})
+        results[f"k={k}"] = rows
+
+        # headline: best QPS at ≥0.9 recall per method
+        for method in ("delta-emg", "delta-emqg", "nsg", "tau_mg", "vamana",
+                       "nsw", "knn"):
+            ok = [r for r in rows if r["method"] == method and r["recall"] >= 0.9]
+            if ok:
+                best = max(ok, key=lambda r: r["qps"])
+                emit(f"exp1_qps_at_r90_k{k}_{method}",
+                     1e6 / best["qps"], f"recall={best['recall']:.3f}")
+            else:
+                best = max((r for r in rows if r["method"] == method),
+                           key=lambda r: r["recall"])
+                emit(f"exp1_qps_at_r90_k{k}_{method}", 0.0,
+                     f"max_recall={best['recall']:.3f} (<0.9)")
+    common.save_json("exp1_qps_recall", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,83 @@
+"""§Roofline: three-term roofline per (arch × shape × mesh) from the
+dry-run's compiled artifacts (benchmarks/results/dryrun.json).
+
+    compute term    = HLO_FLOPs / (chips × 197 TFLOP/s)
+    memory term     = HLO_bytes / (chips × 819 GB/s)
+    collective term = collective_bytes / (chips × 50 GB/s/link)
+
+cost_analysis() reports the per-device partitioned module, so the per-device
+figures are divided by per-chip peak directly (equivalent to the global
+formula).  Collective bytes use the ring-model wire accounting described in
+launch/dryrun.parse_collectives.
+
+Also reports MODEL_FLOPS (6·N·D / 6·N_active·D) and the useful-compute ratio
+MODEL_FLOPS / (HLO_FLOPs × chips), which exposes remat/redundancy waste.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from .common import RESULTS_DIR, emit
+
+DRYRUN_JSON = os.path.join(RESULTS_DIR, "dryrun.json")
+
+
+def load(path: str = DRYRUN_JSON):
+    with open(path) as f:
+        return json.load(f)
+
+
+def table(records, mesh_filter: str = "single_pod_16x16"):
+    rows = []
+    for r in records:
+        if r["mesh"] != mesh_filter:
+            continue
+        if r["status"] == "skip":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": "skip", "reason": r["skip_reason"][:60]})
+            continue
+        if r["status"] != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": "error", "reason": r["error"][:60]})
+            continue
+        rf = r["roofline"]
+        total = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "status": "ok",
+            "compute_ms": rf["compute_s"] * 1e3,
+            "memory_ms": rf["memory_s"] * 1e3,
+            "collective_ms": rf["collective_s"] * 1e3,
+            "bottleneck": rf["bottleneck"],
+            "roofline_frac": rf["compute_s"] / total if total else 0.0,
+            "useful_flops_ratio": rf["useful_flops_ratio"],
+            "mem_gib": r["memory"]["peak_per_device_bytes"] / 2**30,
+        })
+    return rows
+
+
+def run() -> list:
+    if not os.path.exists(DRYRUN_JSON):
+        emit("roofline", 0.0, "dryrun.json missing — run repro.launch.dryrun")
+        return []
+    rows = table(load())
+    print(f"{'arch':<26} {'shape':<14} {'comp ms':>8} {'mem ms':>8} "
+          f"{'coll ms':>8} {'bound':>10} {'frac':>5} {'useful':>6} {'GiB':>6}")
+    for r in rows:
+        if r["status"] != "ok":
+            print(f"{r['arch']:<26} {r['shape']:<14} {r['status'].upper()}: "
+                  f"{r['reason']}")
+            continue
+        print(f"{r['arch']:<26} {r['shape']:<14} {r['compute_ms']:>8.2f} "
+              f"{r['memory_ms']:>8.2f} {r['collective_ms']:>8.2f} "
+              f"{r['bottleneck']:>10} {r['roofline_frac']:>5.2f} "
+              f"{r['useful_flops_ratio']:>6.2f} {r['mem_gib']:>6.1f}")
+        emit(f"roofline_{r['arch']}_{r['shape']}",
+             max(r["compute_ms"], r["memory_ms"], r["collective_ms"]) * 1e3,
+             f"bound={r['bottleneck']};frac={r['roofline_frac']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Exp-8 (Fig. 9): search time vs dataset size at fixed recall target.
+
+The paper scales SIFT 1M→100M; on CPU we scale the synthetic corpus
+1k→16k and verify near-log/linear growth of per-query work (hop count and
+distance computations are the hardware-independent signal)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BuildParams, build_approx, error_bounded_search
+from repro.core.distances import brute_force_knn
+from repro.data import clustered_vectors
+
+from . import common
+from .common import BEAM, M_DEG, T_PARAM, emit, recall, timed_qps
+
+SIZES = (1000, 2000, 4000, 8000, 16000)
+K = 10
+
+
+def run() -> dict:
+    rows = []
+    for n in SIZES:
+        base = clustered_vectors(n, common.DIM, common.N_CLUSTERS, seed=0)
+        queries = clustered_vectors(128, common.DIM, common.N_CLUSTERS, seed=1)
+        gt_d, gt_i = brute_force_knn(queries, base, K)
+        g = build_approx(base, BuildParams(
+            max_degree=M_DEG, beam_width=BEAM, t=T_PARAM, iters=2, block=512))
+        q = jnp.asarray(queries)
+        qps, res = timed_qps(
+            lambda qq: error_bounded_search(g, qq, k=K, alpha=1.2, l_max=192), q)
+        rows.append({
+            "n": n,
+            "qps": qps,
+            "recall": recall(res.ids, gt_i, K),
+            "ndist": float(np.mean(np.asarray(res.n_dist_comps))),
+            "hops": float(np.mean(np.asarray(res.n_hops))),
+        })
+        emit(f"exp8_scal_n{n}", 1e6 / qps,
+             f"recall={rows[-1]['recall']:.3f};ndist={rows[-1]['ndist']:.0f}")
+    # growth factor of work per 2× data (paper: near-flat ⇒ ~log growth)
+    ratios = [rows[i + 1]["ndist"] / rows[i]["ndist"] for i in range(len(rows) - 1)]
+    emit("exp8_work_growth_per_2x", 0.0,
+         f"ratios={';'.join(f'{r:.2f}' for r in ratios)}")
+    common.save_json("exp8_scalability", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps on
+the synthetic Markov language, with periodic checkpoints and resume.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--resume]
+
+The model (d=512, 12 layers, vocab 8k) is ~0.1B params; loss should fall
+from ln(8192) ≈ 9.0 toward the chain entropy ln(4) ≈ 1.39.
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.data import lm_batch, make_markov_lm
+from repro.models.transformer import LMConfig, init, loss_fn
+from repro.optim import OptConfig
+from repro.train import TrainState, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm100m")
+    args = ap.parse_args()
+
+    cfg = LMConfig(name="lm-100m", n_layers=12, d_model=512, n_heads=8,
+                   n_kv_heads=4, d_ff=1536, vocab=8192, dtype=jnp.float32)
+    n_params = cfg.param_count()
+    print(f"model: {n_params / 1e6:.0f}M params")
+
+    opt = OptConfig(lr=3e-4, warmup_steps=30, total_steps=args.steps,
+                    weight_decay=0.01)
+    params = init(cfg, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(
+        lambda p, b: loss_fn(cfg, p, b["tokens"], b["targets"]), opt),
+        donate_argnums=(0,))
+    state = TrainState.create(params, opt)
+
+    mgr = CheckpointManager(args.ckpt_dir, every=100, keep=2)
+    _, state = mgr.restore(state)
+    start = int(state.step)
+    if start:
+        print(f"resumed at step {start}")
+
+    lm = make_markov_lm(cfg.vocab, branch=4, seed=0)
+    print(f"entropy floor: {lm.entropy():.3f} nats")
+    t0, tokens_seen = time.time(), 0
+    for s in range(start, args.steps):
+        toks, tgts = lm_batch(lm, args.batch, args.seq, s, seed=0)
+        state, m = step_fn(state, {"tokens": jnp.asarray(toks),
+                                   "targets": jnp.asarray(tgts)})
+        tokens_seen += toks.size
+        if s % 20 == 0 or s == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {s:4d}  loss={float(m['loss']):.4f}  "
+                  f"lr={float(m['lr']):.2e}  "
+                  f"{tokens_seen / max(dt, 1e-9):.0f} tok/s")
+        mgr.maybe_save(s + 1, state)
+    mgr.wait()
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

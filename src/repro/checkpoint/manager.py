@@ -1,0 +1,159 @@
+"""Fault-tolerant checkpointing: atomic, manifest-committed, keep-K,
+async-capable, reshard-on-restore.
+
+Layout (one directory per step):
+    <dir>/step_000123.tmp/...    (write)
+    <dir>/step_000123/           (os.replace — atomic commit)
+        manifest.json            {step, n_arrays, keys, dtypes, shapes}
+        arrays.npz               flattened pytree, path-keyed
+
+Crash safety: a checkpoint is valid iff the non-``.tmp`` directory exists
+with a readable manifest — a process killed mid-save leaves only ``.tmp``
+junk that the next save cleans up.  ``restore_latest`` walks steps downward
+until it finds a valid one (tolerates a torn final checkpoint).
+
+Resharding: arrays are saved host-resident (fully replicated view); on
+restore the caller passes target shardings (or a template pytree of jax
+arrays with shardings) and each leaf is ``device_put`` to its new layout —
+this is what makes restarts onto a *different* mesh size work (elastic
+world resize, DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d{9})$")
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, tree, keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    name = f"step_{step:09d}"
+    tmp = os.path.join(directory, name + ".tmp")
+    final = os.path.join(directory, name)
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    manifest = {
+        "step": step,
+        "n_arrays": len(flat),
+        "keys": sorted(flat.keys()),
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    _prune(directory, keep)
+    return final
+
+
+def _prune(directory: str, keep: int) -> None:
+    steps = sorted(
+        (m.group(0) for m in map(_STEP_RE.match, os.listdir(directory)) if m),
+    )
+    for name in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(directory, name), ignore_errors=True)
+    for name in os.listdir(directory):        # clean torn saves
+        if name.endswith(".tmp"):
+            shutil.rmtree(os.path.join(directory, name), ignore_errors=True)
+
+
+def list_steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        m = _STEP_RE.match(name)
+        if m and os.path.exists(os.path.join(directory, name, "manifest.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def restore_latest(directory: str, template, shardings=None
+                   ) -> tuple[Optional[int], Any]:
+    """Restore the newest valid checkpoint into the template's structure.
+    ``shardings``: optional pytree (same structure) of jax.sharding.Sharding
+    for reshard-on-load; defaults to the template leaves' shardings when the
+    template holds jax arrays."""
+    for step in reversed(list_steps(directory)):
+        path = os.path.join(directory, f"step_{step:09d}")
+        try:
+            with np.load(os.path.join(path, "arrays.npz")) as z:
+                flat = {k: z[k] for k in z.files}
+        except Exception:
+            continue
+        leaves_p, treedef = jax.tree_util.tree_flatten_with_path(template)
+        keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_)
+                for path_, _ in leaves_p]
+        if set(keys) != set(flat.keys()):
+            raise ValueError(
+                f"checkpoint {path} structure mismatch: "
+                f"{set(keys) ^ set(flat.keys())}")
+        shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                        if shardings is not None else [None] * len(keys))
+        new_leaves = []
+        for (pth, tmpl), key, shd in zip(leaves_p, keys, shard_leaves):
+            arr = flat[key].astype(tmpl.dtype) if hasattr(tmpl, "dtype") else flat[key]
+            if shd is None and isinstance(tmpl, jax.Array) and hasattr(tmpl, "sharding"):
+                shd = tmpl.sharding
+            new_leaves.append(jax.device_put(arr, shd) if shd is not None
+                              else jax.numpy.asarray(arr))
+        return step, jax.tree_util.tree_unflatten(treedef, new_leaves)
+    return None, template
+
+
+class CheckpointManager:
+    """Periodic (optionally async) checkpointing around a train loop."""
+
+    def __init__(self, directory: str, every: int = 100, keep: int = 3,
+                 async_save: bool = True):
+        self.directory = directory
+        self.every = every
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+
+    def maybe_save(self, step: int, tree) -> bool:
+        if step % self.every != 0:
+            return False
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=save_checkpoint,
+                args=(self.directory, step, host_tree, self.keep), daemon=True)
+            self._thread.start()
+        else:
+            save_checkpoint(self.directory, step, host_tree, self.keep)
+        return True
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore(self, template, shardings=None):
+        return restore_latest(self.directory, template, shardings)

@@ -1,0 +1,4 @@
+"""Per-architecture configs (one module per assigned arch + the paper's own
+SIFT1M serving config).  ``get_arch`` / ``all_archs`` are the public API."""
+
+from .base import ArchSpec, ShapeSpec, all_archs, get_arch, load_all  # noqa: F401

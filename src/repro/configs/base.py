@@ -1,0 +1,111 @@
+"""Arch/shape registry: every assigned architecture is a selectable config
+(``--arch <id>``), each carrying its own input-shape set (the 40 dry-run
+cells) plus smoke-test reduced configs.
+
+An ArchSpec is declarative — the launch layer (``repro.launch.steps``) turns
+(arch × shape) into a concrete step function + ShapeDtypeStruct inputs +
+shardings.  ``skip`` marks cells that are intentionally not runnable for the
+family (with the reason recorded; see DESIGN.md §Shape-cell notes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str                   # train | prefill | decode | serve | retrieval
+                                # | full_graph | minibatch | molecule
+    dims: dict                  # family-specific dimensions
+    skip: Optional[str] = None  # reason string → cell intentionally skipped
+    accum_steps: int = 1        # microbatch accumulation for train kinds
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    id: str
+    family: str                 # lm | gnn | recsys | ann
+    model_cfg: Any              # family config dataclass (or factory)
+    shapes: dict[str, ShapeSpec]
+    source: str = ""            # provenance note from the assignment
+    notes: str = ""
+    smoke_cfg: Any = None       # reduced config for CPU smoke tests
+
+    def shape(self, name: str) -> ShapeSpec:
+        return self.shapes[name]
+
+
+_ARCH_MODULES = [
+    "moonshot_v1_16b_a3b",
+    "llama4_maverick_400b_a17b",
+    "internlm2_20b",
+    "phi3_mini_3_8b",
+    "smollm_135m",
+    "gat_cora",
+    "mind",
+    "dien",
+    "fm",
+    "dcn_v2",
+    "sift1m",
+]
+
+_REGISTRY: dict[str, ArchSpec] = {}
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    _REGISTRY[spec.id] = spec
+    return spec
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if not _REGISTRY:
+        load_all()
+    norm = arch_id.replace("-", "_").replace(".", "_")
+    for key, spec in _REGISTRY.items():
+        if key == arch_id or key.replace("-", "_").replace(".", "_") == norm:
+            return spec
+    raise KeyError(f"unknown arch '{arch_id}'; have {sorted(_REGISTRY)}")
+
+
+def all_archs() -> list[ArchSpec]:
+    if not _REGISTRY:
+        load_all()
+    return [v for v in _REGISTRY.values()]
+
+
+def load_all() -> None:
+    for mod in _ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{mod}")
+
+
+# ---- shared shape-set builders --------------------------------------------
+
+def lm_shapes(*, sub_quadratic: bool, accum_train: int = 8) -> dict[str, ShapeSpec]:
+    skip = (None if sub_quadratic else
+            "pure full-attention arch — long_500k needs sub-quadratic "
+            "attention (DESIGN.md §Shape-cell notes)")
+    return {
+        "train_4k": ShapeSpec("train_4k", "train",
+                              {"seq": 4096, "batch": 256},
+                              accum_steps=accum_train),
+        "prefill_32k": ShapeSpec("prefill_32k", "prefill",
+                                 {"seq": 32768, "batch": 32}),
+        "decode_32k": ShapeSpec("decode_32k", "decode",
+                                {"seq": 32768, "batch": 128}),
+        "long_500k": ShapeSpec("long_500k", "decode",
+                               {"seq": 524288, "batch": 1}, skip=skip),
+    }
+
+
+def recsys_shapes() -> dict[str, ShapeSpec]:
+    return {
+        "train_batch": ShapeSpec("train_batch", "train", {"batch": 65536}),
+        "serve_p99": ShapeSpec("serve_p99", "serve", {"batch": 512}),
+        "serve_bulk": ShapeSpec("serve_bulk", "serve", {"batch": 262144}),
+        "retrieval_cand": ShapeSpec("retrieval_cand", "retrieval",
+                                    {"batch": 1, "n_candidates": 1_000_000}),
+    }

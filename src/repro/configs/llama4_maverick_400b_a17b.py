@@ -1,0 +1,35 @@
+"""llama4-maverick-400b-a17b — MoE with alternating dense/MoE layers
+(moe_period=2 reproduces the ~400B total / 17B active budget), 1 shared
+expert per MoE layer, iRoPE-style hybrid attention (3 of 4 layers
+sliding-window 8192, every 4th global).  [hf:meta-llama/Llama-4-*;
+unverified]  The modality frontend ("early fusion") is a stub per the
+assignment — input_specs provide token ids for the backbone.
+
+The hybrid attention makes this the one assigned LM that legitimately runs
+``long_500k`` (see DESIGN.md §Shape-cell notes)."""
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, ShapeSpec, lm_shapes, register
+from repro.models.transformer import LMConfig
+
+ARCH = register(ArchSpec(
+    id="llama4-maverick-400b-a17b",
+    family="lm",
+    model_cfg=LMConfig(
+        name="llama4-maverick-400b-a17b",
+        n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, head_dim=128,
+        d_ff=8192, vocab=202048,
+        n_experts=128, top_k=1, n_shared_experts=1,
+        moe_period=2, first_dense=0,
+        window=8192, window_period=4,
+        dtype=jnp.bfloat16,
+    ),
+    shapes=lm_shapes(sub_quadratic=True, accum_train=4),
+    source="hf:meta-llama/Llama-4-Scout-17B-16E; unverified",
+    smoke_cfg=LMConfig(
+        name="llama4-smoke", n_layers=4, d_model=64, n_heads=4, n_kv_heads=2,
+        head_dim=16, d_ff=96, vocab=512, n_experts=8, top_k=1,
+        n_shared_experts=1, moe_period=2, first_dense=0, window=16,
+        window_period=4, dtype=jnp.float32),
+))

@@ -1,0 +1,38 @@
+"""δ-EMG core — the paper's contribution as a composable JAX library.
+
+Public API:
+    Index containers:  GraphIndex, RaBitQCodes, EMQGIndex, ShardedIndex
+    Construction:      build_exact (Alg. 2), build_approx (Alg. 4),
+                       build_emqg (Sec. 6.1), baselines.BUILDERS
+    Search:            greedy_search (Alg. 1), error_bounded_search (Alg. 3),
+                       probing_search / error_bounded_probing_search (Alg. 5),
+                       ags_search (ablation)
+    Distribution:      build_sharded, make_sharded_search
+    Theory probes:     local_optimum_mask, theorem4_delta_prime
+"""
+
+from .types import (  # noqa: F401
+    EMQGIndex,
+    GraphIndex,
+    INVALID_ID,
+    RaBitQCodes,
+    SearchParams,
+    SearchResult,
+)
+from .build_exact import build_exact  # noqa: F401
+from .build_approx import BuildParams, build_approx  # noqa: F401
+from .emqg import build_emqg, from_graph, memory_footprint  # noqa: F401
+from .search import (  # noqa: F401
+    error_bounded_search,
+    greedy_search,
+    local_optimum_mask,
+    search,
+    theorem4_delta_prime,
+)
+from .probing import (  # noqa: F401
+    ags_search,
+    error_bounded_probing_search,
+    probing_search,
+)
+from . import baselines, distances, distributed, geometry, rabitq  # noqa: F401
+from . import filtered, mips, updates  # noqa: F401  (beyond-paper features)

@@ -1,0 +1,142 @@
+"""Baseline index builders the paper compares against (Sec. 7, Exp-1/2/9).
+
+All baselines share the ``GraphIndex`` container and the occlusion machinery
+in ``geometry.py`` — each is a different pruning rule (or insertion order)
+over the same candidate-generation substrate, exactly mirroring how the
+paper's C++ baselines share the NSG codebase:
+
+* ``build_knn_graph``  — plain top-M kNN graph (GNNS/IEH substrate).
+* ``build_nsg``        — MRNG lune rule (δ→0), greedy-search candidates,
+                         reverse edges + connectivity repair.
+* ``build_taumg``      — τ-MG shifted-lune rule.
+* ``build_vamana``     — DiskANN robust-prune (α ≥ 1) rule.
+* ``build_nsw``        — navigable small world via wave-batched incremental
+                         insertion (flat; HNSW's hierarchy is an entry-point
+                         accelerator we replace with the medoid start — noted
+                         in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .build_approx import BuildParams, build_approx
+from .distances import brute_force_knn, medoid as find_medoid, pairwise_sqdist
+from .geometry import select_neighbors
+from .search import SearchParams, search
+from .types import GraphIndex
+
+
+def build_knn_graph(vectors, k: int = 32) -> GraphIndex:
+    vectors = jnp.asarray(vectors, jnp.float32)
+    _, ids = brute_force_knn(vectors, vectors, min(k, vectors.shape[0] - 1),
+                             exclude_self=True)
+    med = find_medoid(vectors)
+    return GraphIndex(vectors=vectors, neighbors=jnp.asarray(ids),
+                      medoid=jnp.int32(med), kind="knn")
+
+
+def build_nsg(vectors, max_degree: int = 32, beam_width: int = 64,
+              iters: int = 2, **kw) -> GraphIndex:
+    p = BuildParams(max_degree=max_degree, beam_width=beam_width, iters=iters,
+                    delta=0.0, rule="mrng", **kw)
+    g = build_approx(vectors, p)
+    return dataclasses.replace(g, kind="nsg")
+
+
+def build_taumg(vectors, tau: float = 0.05, max_degree: int = 32,
+                beam_width: int = 64, iters: int = 2, **kw) -> GraphIndex:
+    p = BuildParams(max_degree=max_degree, beam_width=beam_width, iters=iters,
+                    delta=tau, rule="tau_mg", **kw)
+    g = build_approx(vectors, p)
+    return dataclasses.replace(g, kind="tau_mg", delta=tau)
+
+
+def build_vamana(vectors, alpha: float = 1.2, max_degree: int = 32,
+                 beam_width: int = 64, iters: int = 2, **kw) -> GraphIndex:
+    p = BuildParams(max_degree=max_degree, beam_width=beam_width, iters=iters,
+                    delta=alpha, rule="vamana", **kw)
+    g = build_approx(vectors, p)
+    return dataclasses.replace(g, kind="vamana", delta=alpha)
+
+
+def build_nsw(vectors, max_degree: int = 32, ef: int = 64,
+              wave: int = 256, seed: int = 0) -> GraphIndex:
+    """Flat NSW by wave-batched incremental insertion.
+
+    Waves trade strict sequentiality for batched accelerator searches: every
+    point in a wave searches the graph built from all previous waves, then
+    connects bidirectionally to its ef-best candidates (top max_degree).
+    """
+    vectors = jnp.asarray(vectors, jnp.float32)
+    vectors_np = np.asarray(vectors)
+    n = vectors.shape[0]
+    M = max_degree
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(n)
+
+    nbr = np.full((n, M), -1, np.int32)
+    deg = np.zeros(n, np.int32)
+
+    # seed clique
+    seed_sz = min(M + 1, n)
+    seed_ids = order[:seed_sz]
+    d2 = np.asarray(pairwise_sqdist(jnp.asarray(vectors_np[seed_ids]),
+                                    jnp.asarray(vectors_np[seed_ids])))
+    for i, u in enumerate(seed_ids):
+        others = np.argsort(d2[i])
+        picks = [int(seed_ids[j]) for j in others if seed_ids[j] != u][: M]
+        nbr[u, : len(picks)] = picks
+        deg[u] = len(picks)
+
+    inserted = list(seed_ids)
+    pos = seed_sz
+    while pos < n:
+        wave_ids = order[pos : pos + wave]
+        sub_vecs = jnp.asarray(vectors_np[inserted])
+        sub_nbr_np = nbr[inserted].copy()
+        # remap global ids → local subgraph ids
+        remap = -np.ones(n, np.int64)
+        remap[inserted] = np.arange(len(inserted))
+        valid = sub_nbr_np >= 0
+        sub_nbr_np = np.where(valid, remap[np.maximum(sub_nbr_np, 0)], -1)
+        sub = GraphIndex(sub_vecs, jnp.asarray(sub_nbr_np.astype(np.int32)),
+                         jnp.int32(0), kind="nsw")
+        p = SearchParams(k=min(M, len(inserted)), l0=ef, l_max=ef,
+                         adaptive=False, max_hops=4 * ef)
+        res = search(sub, jnp.asarray(vectors_np[wave_ids]), p)
+        ids_local = np.asarray(res.ids)
+        inserted_arr = np.asarray(inserted)
+        for j, u in enumerate(wave_ids):
+            cands = ids_local[j]
+            cands = inserted_arr[cands[cands >= 0]][:M]
+            nbr[u, : len(cands)] = cands
+            deg[u] = len(cands)
+            for v in cands:  # reverse link — never destructive: replacing a
+                # full node's farthest link strips the early long-range edges
+                # NSW navigation depends on (observed: 2.7% reachability)
+                if deg[v] < M:
+                    nbr[v, deg[v]] = u
+                    deg[v] += 1
+        inserted.extend(int(u) for u in wave_ids)
+        pos += len(wave_ids)
+
+    med = find_medoid(vectors)
+    from .build_approx import _repair_connectivity
+
+    _repair_connectivity(vectors_np, nbr, deg, M, med)
+    return GraphIndex(vectors=vectors, neighbors=jnp.asarray(nbr),
+                      medoid=jnp.int32(med), kind="nsw")
+
+
+BUILDERS = {
+    "knn": build_knn_graph,
+    "nsg": build_nsg,
+    "tau_mg": build_taumg,
+    "vamana": build_vamana,
+    "nsw": build_nsw,
+}

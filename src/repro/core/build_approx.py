@@ -1,0 +1,339 @@
+"""Algorithm 4 — near-linear approximate δ-EMG construction.
+
+Host-orchestrated, accelerator-bulk design (the same split DiskANN/Vamana
+builders use): the O(n·L) beam searches and the O(n·L·M·d) occlusion pruning
+run as vmapped JAX computations over node blocks; the cheap, irregular graph
+surgery (reverse edges, connectivity repair) runs in NumPy between
+iterations.  Each refinement iteration is idempotent given its input graph,
+which is what makes the per-iteration checkpointing fault-tolerant: a
+restarted worker redoes at most one iteration.
+
+Faithful to the paper:
+  * bootstrap = top-M approximate kNN graph           (line 2)
+  * per-node candidates from greedy search            (line 6)
+  * LocallySelectNeighbors with δ_t(u,v) = 1 − d(u,v)/d(u,v_(t))   (line 21)
+  * degree cap M, reverse edges, connectivity repair  (lines 8–15)
+  * optional degree alignment for δ-EMQG (binary search on t, Sec. 6.1)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .distances import brute_force_knn, medoid as find_medoid, pairwise_sqdist
+from .geometry import adaptive_deltas, select_neighbors
+from .search import SearchParams, search
+from .types import GraphIndex
+
+
+@dataclasses.dataclass(frozen=True)
+class BuildParams:
+    max_degree: int = 32          # M
+    beam_width: int = 64          # L (candidate set size, paper uses 1000 at 1M scale)
+    t: int = 16                   # neighborhood-scale parameter (t ≤ L)
+    iters: int = 3                # refinement iterations I
+    delta: Optional[float] = None  # None → adaptive δ_t rule; float → fixed δ (Exp-3)
+    rule: str = "delta_emg"
+    align_degree: bool = False    # δ-EMQG: binary-search t so |N(u)| == M exactly
+    block: int = 512              # nodes per device batch
+    max_hops: int = 1024
+    seed: int = 0
+    checkpoint_dir: Optional[str] = None
+
+
+@partial(jax.jit, static_argnames=("rule", "max_keep", "fixed_delta", "t"))
+def _select_block(vectors, u_ids, cand_ids, cand_dists, t, rule, max_keep,
+                  fixed_delta):
+    """Vectorized LocallySelectNeighbors over a block of nodes."""
+
+    def one(u_id, ids, dists):
+        u_vec = jnp.take(vectors, u_id, axis=0)
+        d2 = jnp.where(ids >= 0, dists * dists, jnp.inf)
+        vecs = jnp.take(vectors, jnp.maximum(ids, 0), axis=0)
+        if fixed_delta is None:
+            deltas = adaptive_deltas(d2, t)
+        else:
+            deltas = jnp.full(d2.shape, jnp.float32(fixed_delta))
+        return select_neighbors(u_vec, vecs, d2, ids, deltas,
+                                rule=rule, max_keep=max_keep)
+
+    return jax.vmap(one)(u_ids, cand_ids, cand_dists)
+
+
+@partial(jax.jit, static_argnames=("rule", "max_keep"))
+def _select_block_per_node_t(vectors, u_ids, cand_ids, cand_dists, t_vec,
+                             rule, max_keep):
+    """Like _select_block but with a per-node t (degree-alignment search)."""
+
+    def one(u_id, ids, dists, t):
+        u_vec = jnp.take(vectors, u_id, axis=0)
+        d2 = jnp.where(ids >= 0, dists * dists, jnp.inf)
+        vecs = jnp.take(vectors, jnp.maximum(ids, 0), axis=0)
+        t_idx = jnp.clip(t - 1, 0, d2.shape[0] - 1)
+        d_t = jnp.sqrt(jnp.maximum(d2[t_idx], 1e-30))
+        deltas = 1.0 - jnp.sqrt(d2) / d_t
+        return select_neighbors(u_vec, vecs, d2, ids, deltas,
+                                rule=rule, max_keep=max_keep)
+
+    return jax.vmap(one)(u_ids, cand_ids, cand_dists, t_vec)
+
+
+def _bfs_reachable(neighbors: np.ndarray, start: int) -> np.ndarray:
+    """Frontier BFS over fixed-width adjacency.  bool[n]."""
+    n = neighbors.shape[0]
+    seen = np.zeros(n, bool)
+    seen[start] = True
+    frontier = np.array([start])
+    while frontier.size:
+        nxt = neighbors[frontier].ravel()
+        nxt = nxt[nxt >= 0]
+        nxt = np.unique(nxt)
+        nxt = nxt[~seen[nxt]]
+        seen[nxt] = True
+        frontier = nxt
+    return seen
+
+
+def _add_reverse_edges(nbr: np.ndarray, deg: np.ndarray, M: int) -> None:
+    """Line 14: add (v, u) for every (u, v), respecting the degree cap."""
+    n = nbr.shape[0]
+    src = np.repeat(np.arange(n, dtype=np.int32), nbr.shape[1])
+    dst = nbr.ravel()
+    ok = dst >= 0
+    src, dst = src[ok], dst[ok]
+    # iterate edges grouped by destination; numpy-side, O(E)
+    order = np.argsort(dst, kind="stable")
+    src, dst = src[order], dst[order]
+    for u, v in zip(dst.tolist(), src.tolist()):  # add v into N(u)
+        if deg[u] >= M:
+            continue
+        row = nbr[u, : deg[u]]
+        if v == u or (row == v).any():
+            continue
+        nbr[u, deg[u]] = v
+        deg[u] += 1
+
+
+def _repair_connectivity(vectors_np: np.ndarray, nbr: np.ndarray,
+                         deg: np.ndarray, M: int, med: int,
+                         max_rounds: int = 8) -> int:
+    """Line 15: link unreachable nodes from their nearest reachable node."""
+    n = nbr.shape[0]
+    total_fixed = 0
+    for _ in range(max_rounds):
+        seen = _bfs_reachable(nbr, med)
+        bad = np.where(~seen)[0]
+        if bad.size == 0:
+            break
+        good = np.where(seen)[0]
+        gv = jnp.asarray(vectors_np[good])
+        for s in range(0, bad.size, 1024):
+            chunk = bad[s : s + 1024]
+            d2 = pairwise_sqdist(jnp.asarray(vectors_np[chunk]), gv)
+            nearest = good[np.asarray(jnp.argmin(d2, axis=1))]
+            for x, r in zip(chunk.tolist(), nearest.tolist()):
+                if deg[r] < M:
+                    nbr[r, deg[r]] = x
+                    deg[r] += 1
+                else:
+                    # replace r's longest out-edge (keeps the cap; the evicted
+                    # edge is recoverable in the next refinement iteration)
+                    row = nbr[r, :M]
+                    d2row = ((vectors_np[row] - vectors_np[r]) ** 2).sum(-1)
+                    nbr[r, int(np.argmax(d2row))] = x
+                total_fixed += 1
+    return total_fixed
+
+
+def _candidate_search(graph: GraphIndex, queries: jax.Array, L: int,
+                      max_hops: int):
+    """Line 6: R_u ← GreedySearch(G, v_s, u, L, L), returning candidates."""
+    p = SearchParams(k=min(L, graph.n), l0=L, l_max=L, adaptive=False,
+                     max_hops=max_hops)
+    _, cand_ids, cand_dists = search(graph, queries, p, with_candidates=True)
+    return cand_ids, cand_dists
+
+
+def _reverse_lists(nbr: np.ndarray, cap: int) -> np.ndarray:
+    """int32[n, cap] of reverse neighbors (nodes pointing at each row)."""
+    n, M = nbr.shape
+    src = np.repeat(np.arange(n, dtype=np.int32), M)
+    dst = nbr.ravel()
+    ok = dst >= 0
+    src, dst = src[ok], dst[ok]
+    order = np.argsort(dst, kind="stable")
+    src, dst = src[order], dst[order]
+    out = np.full((n, cap), -1, np.int32)
+    counts = np.zeros(n, np.int32)
+    starts = np.searchsorted(dst, np.arange(n))
+    ends = np.searchsorted(dst, np.arange(n) + 1)
+    for u in range(n):
+        take = src[starts[u] : ends[u]][:cap]
+        out[u, : take.size] = take
+        counts[u] = take.size
+    return out
+
+
+def _dedup_rows(ids: np.ndarray, self_ids: np.ndarray) -> np.ndarray:
+    """Vectorized per-row dedup: later duplicates (and self) → -1."""
+    order = np.argsort(ids, axis=1, kind="stable")
+    s = np.take_along_axis(ids, order, axis=1)
+    dup = np.zeros_like(s, bool)
+    dup[:, 1:] = (s[:, 1:] == s[:, :-1]) & (s[:, 1:] >= 0)
+    s = np.where(dup, -1, s)
+    out = np.full_like(ids, -1)
+    np.put_along_axis(out, order, s, axis=1)
+    out[out == self_ids[:, None]] = -1
+    return out
+
+
+@partial(jax.jit, static_argnames=("L",))
+def _prep_candidates(vectors, u_ids, merged_ids, L: int):
+    """Exact d(u, ·) for merged candidate ids, sorted ascending, top L+1."""
+
+    def one(u_id, ids):
+        u_vec = jnp.take(vectors, u_id, axis=0)
+        rows = jnp.take(vectors, jnp.maximum(ids, 0), axis=0)
+        d2 = jnp.sum((rows - u_vec[None, :]) ** 2, axis=-1)
+        d2 = jnp.where(ids >= 0, d2, jnp.inf)
+        neg, idx = jax.lax.top_k(-d2, min(L + 1, ids.shape[0]))
+        return ids[idx], jnp.sqrt(jnp.maximum(-neg, 0.0))
+
+    return jax.vmap(one)(u_ids, merged_ids)
+
+
+def _align_degrees(vectors, nbr, deg, cand_ids_all, cand_dists_all, p: BuildParams):
+    """Sec. 6.1: binary-search the smallest t whose pruned neighborhood has
+    ≥ M entries, then keep the M closest → every node has exactly M
+    neighbors (FastScan / lane alignment)."""
+    n, M, L = nbr.shape[0], p.max_degree, p.beam_width
+    deficient = np.where(deg < M)[0]
+    for s in range(0, deficient.size, p.block):
+        idx = deficient[s : s + p.block]
+        ids = jnp.asarray(cand_ids_all[idx])
+        dst = jnp.asarray(cand_dists_all[idx])
+        u_ids = jnp.asarray(idx.astype(np.int32))
+        lo = np.full(idx.size, 1, np.int32)
+        hi = np.full(idx.size, L, np.int32)
+        n_cand = (cand_ids_all[idx] >= 0).sum(1)
+        # nodes with fewer than M candidates can never reach M — take all
+        feasible = n_cand >= M + 1
+        best = hi.copy()
+        for _ in range(int(np.ceil(np.log2(max(L, 2)))) + 1):
+            mid = (lo + hi) // 2
+            _, cnt = _select_block_per_node_t(
+                vectors, u_ids, ids, dst, jnp.asarray(mid),
+                rule=p.rule, max_keep=M + 1,
+            )
+            cnt = np.asarray(cnt)
+            enough = cnt >= M
+            best = np.where(enough & (mid < best), mid, best)
+            hi = np.where(enough, np.maximum(mid - 1, 1), hi)
+            lo = np.where(enough, lo, np.minimum(mid + 1, L))
+            if (lo > hi).all():
+                break
+        t_final = np.where(feasible, best, L).astype(np.int32)
+        kept, cnt = _select_block_per_node_t(
+            vectors, u_ids, ids, dst, jnp.asarray(t_final),
+            rule=p.rule, max_keep=M,
+        )
+        kept, cnt = np.array(kept), np.array(cnt)
+        # pad any still-deficient rows with nearest unselected candidates
+        ids_np = cand_ids_all[idx]
+        for j in range(idx.size):
+            row = kept[j]
+            c = int(cnt[j])
+            if c < M:
+                pool = ids_np[j]
+                pool = pool[(pool >= 0) & (pool != idx[j])]
+                extra = [x for x in pool.tolist() if x not in set(row[:c].tolist())]
+                take = extra[: M - c]
+                row[c : c + len(take)] = take
+                cnt[j] = c + len(take)
+            nbr[idx[j]] = row
+            deg[idx[j]] = cnt[j]
+
+
+def build_approx(vectors, params: BuildParams = BuildParams(),
+                 verbose: bool = False) -> GraphIndex:
+    """Algorithm 4.  Returns a localized, degree-balanced approximate δ-EMG."""
+    p = params
+    vectors = jnp.asarray(vectors, jnp.float32)
+    vectors_np = np.asarray(vectors)
+    n = vectors.shape[0]
+    M, L = p.max_degree, min(p.beam_width, n)
+    med = find_medoid(vectors, seed=p.seed)
+
+    # line 2: bootstrap from a top-M approximate NN graph
+    _, knn_ids = brute_force_knn(vectors, vectors, min(M, n - 1),
+                                 exclude_self=True)
+    nbr = np.full((n, M), -1, np.int32)
+    nbr[:, : knn_ids.shape[1]] = knn_ids
+    graph = GraphIndex(vectors, jnp.asarray(nbr), jnp.int32(med),
+                       kind="delta_emg_approx", delta=p.delta or 0.0)
+
+    cand_ids_all = np.full((n, L + 1), -1, np.int32)
+    cand_dists_all = np.full((n, L + 1), np.inf, np.float32)
+
+    for it in range(p.iters):
+        t0 = time.time()
+        new_nbr = np.full((n, M), -1, np.int32)
+        new_deg = np.zeros(n, np.int32)
+        # candidate enrichment: beam-search candidates ∪ current out-neighbors
+        # ∪ reverse neighbors (the paper's reverse-edge step, applied at
+        # candidate level — standard NSG/Vamana practice; without it the
+        # search-only candidate sets of early iterations are anchored near
+        # the medoid and clustered data loses inter-cluster navigability).
+        cur_nbr = np.asarray(graph.neighbors)
+        rev_nbr = _reverse_lists(cur_nbr, M)
+        for s in range(0, n, p.block):
+            ids_blk = np.arange(s, min(s + p.block, n), dtype=np.int32)
+            q_blk = jnp.asarray(vectors_np[ids_blk])
+            cand_ids, cand_dists = _candidate_search(graph, q_blk, L, p.max_hops)
+            merged = np.concatenate(
+                [np.asarray(cand_ids), cur_nbr[ids_blk], rev_nbr[ids_blk]],
+                axis=1,
+            )
+            merged = _dedup_rows(merged, ids_blk)
+            cand_ids, cand_dists = _prep_candidates(
+                vectors, jnp.asarray(ids_blk), jnp.asarray(merged), L)
+            kept, cnt = _select_block(
+                vectors, jnp.asarray(ids_blk), cand_ids, cand_dists,
+                t=min(p.t, L), rule=p.rule, max_keep=M,
+                fixed_delta=p.delta,
+            )
+            new_nbr[ids_blk] = np.asarray(kept)
+            new_deg[ids_blk] = np.asarray(cnt)
+            if it == p.iters - 1:
+                cand_ids_all[ids_blk] = np.asarray(cand_ids)
+                cand_dists_all[ids_blk] = np.asarray(cand_dists)
+
+        _add_reverse_edges(new_nbr, new_deg, M)
+        n_fixed = _repair_connectivity(vectors_np, new_nbr, new_deg, M, med)
+        graph = GraphIndex(vectors, jnp.asarray(new_nbr), jnp.int32(med),
+                           kind="delta_emg_approx", delta=p.delta or 0.0)
+        if p.checkpoint_dir:
+            os.makedirs(p.checkpoint_dir, exist_ok=True)
+            np.savez(os.path.join(p.checkpoint_dir, f"build_iter{it}.npz"),
+                     neighbors=new_nbr, medoid=med, iter=it)
+        if verbose:
+            print(f"[build_approx] iter {it}: mean_deg="
+                  f"{(new_nbr >= 0).sum(1).mean():.1f} repaired={n_fixed} "
+                  f"({time.time() - t0:.1f}s)")
+
+    if p.align_degree:
+        deg = (np.asarray(graph.neighbors) >= 0).sum(1).astype(np.int32)
+        nbr = np.asarray(graph.neighbors).copy()
+        _align_degrees(vectors, nbr, deg, cand_ids_all, cand_dists_all, p)
+        _repair_connectivity(vectors_np, nbr, deg, M, med)
+        graph = GraphIndex(vectors, jnp.asarray(nbr), jnp.int32(med),
+                           kind="delta_emqg", delta=p.delta or 0.0)
+    return graph

@@ -1,0 +1,91 @@
+"""Distance primitives: blocked pairwise distances and exact brute-force kNN.
+
+These are the *oracles* and construction workhorses.  The serving hot path
+uses the Pallas kernels in ``repro.kernels`` (gather_l2 / bitdot); everything
+here is plain XLA so it runs identically on CPU and TPU and is used to
+validate the kernels.
+
+Squared-distance identity used throughout:
+    ‖x − y‖² = ‖x‖² + ‖y‖² − 2⟨x, y⟩
+The ⟨x, y⟩ term is a matmul → lands on the MXU; the norm terms are rank-1
+broadcasts.  We clamp at 0 to kill negative round-off.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def pairwise_sqdist(x: jax.Array, y: jax.Array) -> jax.Array:
+    """f32[m, n] of squared distances between rows of x (m,d) and y (n,d)."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    x2 = jnp.sum(x * x, axis=-1)[:, None]
+    y2 = jnp.sum(y * y, axis=-1)[None, :]
+    xy = x @ y.T
+    return jnp.maximum(x2 + y2 - 2.0 * xy, 0.0)
+
+
+@jax.jit
+def sqdist_one_to_many(q: jax.Array, ys: jax.Array) -> jax.Array:
+    """f32[n] squared distances from a single query (d,) to rows of ys (n,d)."""
+    diff = ys.astype(jnp.float32) - q.astype(jnp.float32)[None, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _knn_block(queries, base, k):
+    d2 = pairwise_sqdist(queries, base)
+    neg, idx = jax.lax.top_k(-d2, k)
+    return -neg, idx
+
+
+def brute_force_knn(
+    queries: jax.Array | np.ndarray,
+    base: jax.Array | np.ndarray,
+    k: int,
+    block: int = 1024,
+    exclude_self: bool = False,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Exact top-k by blocked brute force.  Returns (dists f32[m,k], ids i32[m,k]).
+
+    Distances returned are true (non-squared) Euclidean.  ``exclude_self``
+    drops an exact-0 self match (construction convenience: queries == base).
+    """
+    base = jnp.asarray(base)
+    kk = k + 1 if exclude_self else k
+    out_d, out_i = [], []
+    m = queries.shape[0]
+    for s in range(0, m, block):
+        qb = jnp.asarray(queries[s : s + block])
+        d2, idx = _knn_block(qb, base, min(kk, base.shape[0]))
+        d2, idx = np.asarray(d2), np.asarray(idx)
+        if exclude_self:
+            rows = np.arange(d2.shape[0]) + s
+            self_pos = idx == rows[:, None]
+            # push self matches to the end, then drop the last column
+            d2 = np.where(self_pos, np.inf, d2)
+            order = np.argsort(d2, axis=1, kind="stable")
+            d2 = np.take_along_axis(d2, order, axis=1)[:, :k]
+            idx = np.take_along_axis(idx, order, axis=1)[:, :k]
+        out_d.append(np.sqrt(np.maximum(d2, 0.0)))
+        out_i.append(idx.astype(np.int32))
+    return np.concatenate(out_d), np.concatenate(out_i)
+
+
+def medoid(vectors: jax.Array | np.ndarray, sample: int = 4096, seed: int = 0) -> int:
+    """Approximate medoid: the dataset point nearest the (sampled) mean."""
+    v = np.asarray(vectors)
+    rng = np.random.default_rng(seed)
+    if v.shape[0] > sample:
+        idx = rng.choice(v.shape[0], sample, replace=False)
+        mean = v[idx].mean(axis=0)
+    else:
+        mean = v.mean(axis=0)
+    d2 = np.asarray(sqdist_one_to_many(jnp.asarray(mean), jnp.asarray(v)))
+    return int(np.argmin(d2))

@@ -1,0 +1,178 @@
+"""Distributed sharded ANN index — the multi-pod serving path.
+
+Standard scale-out ANN architecture (SPANN/DiskANN-style), expressed in
+``shard_map``:
+
+* Dataset rows are partitioned into S shards; each shard holds an
+  independent δ-EMG / δ-EMQG over its rows (local id space + global offset).
+* A query batch is replicated across the index-sharding axes and sharded
+  across the ``pod`` axis (each pod serves its own slice of the request
+  stream against a full index replica-set).
+* Every device runs the *same* lock-step batched search over its shard, then
+  the per-shard top-k are merged exactly:
+    - ``merge="all_gather"``: one all-gather of (k ids, k dists) + local
+      top-k — one collective, O(S·k·B) bytes per device.
+    - ``merge="ring"``: S−1 ``ppermute`` steps each merging two k-lists —
+      O((S−1)·k·B) bytes total but pipelined on neighbor links only; this is
+      the collective-term optimization evaluated in EXPERIMENTS.md §Perf.
+
+Exactness: top-k over a union of disjoint sets == merge of per-set top-k, so
+sharding never loses recall (per-shard search quality is the only
+approximation, same as the single-node index).
+
+All index containers are pytrees → ``stack_indices`` builds the [S, ...]
+stacked representation with ``tree_map``, and the same code path serves
+GraphIndex (Alg. 3) and EMQGIndex (Alg. 5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .build_approx import BuildParams, build_approx
+from .emqg import build_emqg
+from .probing import probing_search
+from .search import search
+from .types import EMQGIndex, GraphIndex, SearchParams, static_field, _register
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class ShardedIndex:
+    """Stacked per-shard indexes + global id offsets.
+
+    ``index`` leaves have leading dim S.  ``offsets`` is int32[S] — global id
+    of local row 0 in each shard.  Shards must be equal-sized (pad the last
+    shard by repeating its first row; duplicate results are dedup-safe
+    because merge keeps the closer copy and ids are identical).
+    """
+
+    index: GraphIndex | EMQGIndex
+    offsets: jax.Array
+    n_total: int = static_field(default=0)
+
+    @property
+    def n_shards(self) -> int:
+        return self.offsets.shape[0]
+
+
+def stack_indices(indices: Sequence, offsets: Sequence[int], n_total: int) -> ShardedIndex:
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *indices)
+    return ShardedIndex(index=stacked,
+                        offsets=jnp.asarray(offsets, jnp.int32),
+                        n_total=n_total)
+
+
+def build_sharded(vectors, n_shards: int, params: Optional[BuildParams] = None,
+                  quantized: bool = False, seed: int = 0) -> ShardedIndex:
+    """Contiguous row partition; per-shard Algorithm-4 builds (equal-sized,
+    last shard padded by wrapping)."""
+    vectors = np.asarray(vectors, np.float32)
+    n = vectors.shape[0]
+    per = int(np.ceil(n / n_shards))
+    shards, offsets = [], []
+    for s in range(n_shards):
+        lo = s * per
+        rows = vectors[lo : lo + per]
+        if rows.shape[0] < per:  # pad by wrapping
+            pad = np.tile(rows[:1] if rows.size else vectors[:1],
+                          (per - rows.shape[0], 1))
+            rows = np.concatenate([rows, pad]) if rows.size else pad
+        p = params or BuildParams()
+        p = dataclasses.replace(p, seed=seed + s)
+        if quantized:
+            shards.append(build_emqg(rows, p))
+        else:
+            shards.append(build_approx(rows, p))
+        offsets.append(lo)
+    return stack_indices(shards, offsets, n)
+
+
+def _local_search(index, queries, params: SearchParams, quantized: bool):
+    if quantized:
+        return probing_search(index, queries, params)
+    return search(index, queries, params)
+
+
+def _merge_all_gather(ids, dists, k, axis):
+    """ids/dists [B, k] per shard → exact global top-k, replicated."""
+    all_ids = jax.lax.all_gather(ids, axis, axis=1)      # [B, S, k]
+    all_d = jax.lax.all_gather(dists, axis, axis=1)
+    B = ids.shape[0]
+    flat_i = all_ids.reshape(B, -1)
+    flat_d = all_d.reshape(B, -1)
+    neg, idx = jax.lax.top_k(-flat_d, k)
+    return jnp.take_along_axis(flat_i, idx, axis=1), -neg
+
+
+def _merge_ring(ids, dists, k, axis, n_shards):
+    """(S−1)-step ppermute ring merge; ends replicated (each device has seen
+    every shard's list exactly once)."""
+    perm = [(i, (i + 1) % n_shards) for i in range(n_shards)]
+
+    def step(carry, _):
+        cur_i, cur_d, acc_i, acc_d = carry
+        cur_i = jax.lax.ppermute(cur_i, axis, perm)
+        cur_d = jax.lax.ppermute(cur_d, axis, perm)
+        cat_i = jnp.concatenate([acc_i, cur_i], axis=1)
+        cat_d = jnp.concatenate([acc_d, cur_d], axis=1)
+        neg, idx = jax.lax.top_k(-cat_d, k)
+        return (cur_i, cur_d, jnp.take_along_axis(cat_i, idx, axis=1), -neg), None
+
+    (_, _, acc_i, acc_d), _ = jax.lax.scan(
+        step, (ids, dists, ids, dists), None, length=n_shards - 1)
+    return acc_i, acc_d
+
+
+def make_sharded_search(mesh, shard_axes=("data",), query_axis=None,
+                        merge: str = "all_gather", quantized: bool = False):
+    """Build a jit-able sharded search fn over ``mesh``.
+
+    ``shard_axes``: mesh axes the index shards span (S = their product).
+    ``query_axis``: mesh axis (or tuple) the query batch is sharded over
+    (None → all queries on every device).  Sharding queries over the axes
+    *not* used for index shards turns those axes into throughput parallelism
+    — e.g. index over 'data', queries over ('pod','model').
+    Returns fn(sharded_index, queries [B, d], params) → (ids, dists) [B, k]
+    with outputs replicated over ``shard_axes`` and sharded over
+    ``query_axis``.  The ring merge needs a single shard axis (ppermute is
+    defined on one mesh axis); multi-axis shards use all_gather.
+    """
+    axis_name = shard_axes if len(shard_axes) > 1 else shard_axes[0]
+    n_shards = int(np.prod([mesh.shape[a] for a in shard_axes]))
+    if merge == "ring" and len(shard_axes) > 1:
+        raise ValueError("ring merge requires a single shard axis")
+    q_spec = P(query_axis) if query_axis else P()
+
+    def body(sidx: ShardedIndex, queries, params: SearchParams):
+        local_index = jax.tree.map(lambda x: x[0], sidx.index)
+        offset = sidx.offsets[0]
+        res = _local_search(local_index, queries, params, quantized)
+        gids = jnp.where(res.ids >= 0, res.ids + offset, res.ids)
+        if merge == "ring":
+            return _merge_ring(gids, res.dists, params.k, axis_name, n_shards)
+        return _merge_all_gather(gids, res.dists, params.k, axis_name)
+
+    def run(sidx: ShardedIndex, queries, params: SearchParams):
+        index_specs = jax.tree.map(lambda _: P(shard_axes), sidx.index)
+        in_specs = (
+            ShardedIndex(index=index_specs, offsets=P(shard_axes), n_total=sidx.n_total),
+            q_spec,
+        )
+        fn = jax.shard_map(
+            partial(body, params=params),
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=(q_spec, q_spec),
+            check_vma=False,
+        )
+        return fn(sidx, queries)
+
+    return run

@@ -1,0 +1,162 @@
+"""Occlusion-region predicates and neighbor-selection rules.
+
+This module is the geometric heart of the paper.  Every rule is expressed on
+*squared* distances so the hot paths never take square roots except where a
+rule is inherently metric (δ-EMG's cross term, τ-MG's additive shift) — there
+we take the root once, outside any inner loop, on already-reduced scalars.
+
+Rules implemented (all broadcastable / vmappable):
+
+* ``occludes_delta``  — Def. 9 of the paper (δ-EMG occlusion region).
+* ``occludes_mrng``   — MRNG lune (δ → 0 limit).
+* ``occludes_vamana`` — DiskANN/Vamana robust-prune with slack α ≥ 1.
+* ``occludes_taumg``  — τ-MG shifted lune.
+
+and the sequential greedy selector ``select_neighbors`` that applies any rule
+to a distance-sorted candidate list (Algorithm 2's ``SelectNeighbors`` and
+Algorithm 4's ``LocallySelectNeighbors`` share it; the latter passes the
+adaptive ``δ_t`` schedule from eq. (δ_t) of Sec. 6).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .types import INVALID_ID
+
+
+# ---------------------------------------------------------------------------
+# Occlusion predicates.  Arguments are *squared* distances:
+#   d2_uv = d²(u, v)   candidate edge under test
+#   d2_uw = d²(u, w)   kept (shorter) edge
+#   d2_wv = d²(w, v)   kept-node-to-candidate distance
+# Each returns True where w occludes v (edge (u, v) may be pruned).
+# ---------------------------------------------------------------------------
+
+def occludes_delta(d2_uv, d2_uw, d2_wv, delta):
+    """Def. 9:  d(x,u) < d(u,v)  ∧  d²(x,v) + 2δ·d(u,v)·d(x,u) < d²(u,v).
+
+    δ may be negative (Alg. 4's adaptive rule on long edges) — the region then
+    *grows past* the MRNG lune, pruning more aggressively.  δ ∈ (0,1) shrinks
+    it, keeping more edges (stronger guarantee).
+    """
+    d_uv = jnp.sqrt(d2_uv)
+    d_uw = jnp.sqrt(d2_uw)
+    return (d2_uw < d2_uv) & (d2_wv + 2.0 * delta * d_uv * d_uw < d2_uv)
+
+
+def occludes_mrng(d2_uv, d2_uw, d2_wv, _unused=0.0):
+    """MRNG lune: w strictly closer to both u and v than d(u,v)."""
+    return (d2_uw < d2_uv) & (d2_wv < d2_uv)
+
+
+def occludes_vamana(d2_uv, d2_uw, d2_wv, alpha=1.2):
+    """Vamana robust prune: prune v if α·d(w,v) ≤ d(u,v) for a kept w."""
+    return (d2_uw < d2_uv) & (alpha * alpha * d2_wv <= d2_uv)
+
+
+def occludes_taumg(d2_uv, d2_uw, d2_wv, tau=0.1):
+    """τ-MG shifted lune: prune v if d(u,w) < d(u,v) ∧ d(w,v) < d(u,v) − 3τ."""
+    d_uv = jnp.sqrt(d2_uv)
+    shifted = jnp.maximum(d_uv - 3.0 * tau, 0.0)
+    return (d2_uw < d2_uv) & (d2_wv < shifted * shifted)
+
+
+OCCLUSION_RULES: dict[str, Callable] = {
+    "delta_emg": occludes_delta,
+    "mrng": occludes_mrng,
+    "vamana": occludes_vamana,
+    "tau_mg": occludes_taumg,
+}
+
+
+# ---------------------------------------------------------------------------
+# Navigable-ball membership (Lemma 1) — used by property tests.
+# ---------------------------------------------------------------------------
+
+def in_navigable_ball(q, u, v, delta):
+    """True iff d(q, v) < δ·d(q, u): q lies in the ball where Lemma 1 bites."""
+    d2_qv = jnp.sum((q - v) ** 2, axis=-1)
+    d2_qu = jnp.sum((q - u) ** 2, axis=-1)
+    return d2_qv < delta * delta * d2_qu
+
+
+def in_occlusion_region(x, u, v, delta):
+    """Point-level Def. 9 membership (tests / visual debugging)."""
+    d2_xu = jnp.sum((x - u) ** 2, axis=-1)
+    d2_xv = jnp.sum((x - v) ** 2, axis=-1)
+    d2_uv = jnp.sum((u - v) ** 2, axis=-1)
+    return occludes_delta(d2_uv, d2_xu, d2_xv, delta)
+
+
+# ---------------------------------------------------------------------------
+# Sequential greedy neighbor selection.
+#
+# Given candidates sorted by ascending distance from u, keep candidate v_i iff
+# no already-kept w occludes it.  The loop over candidates is inherently
+# sequential (each decision depends on the kept set) but each step is a fully
+# vectorized check against the ≤ max_keep kept nodes; the whole function is
+# vmapped over nodes by the builders.
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("rule", "max_keep"))
+def select_neighbors(
+    u_vec: jax.Array,          # f32[d]      the node whose edges we pick
+    cand_vecs: jax.Array,      # f32[L, d]   candidates, ascending d(u, ·)
+    cand_d2: jax.Array,        # f32[L]      squared distances d²(u, c_i)
+    cand_ids: jax.Array,       # int32[L]    global ids (INVALID_ID = padding)
+    deltas: jax.Array,         # f32[L]      per-candidate rule parameter
+    rule: str = "delta_emg",
+    max_keep: int = 64,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (kept_ids int32[max_keep], kept_count int32).
+
+    ``deltas[i]`` is the δ (or α / τ) used when testing whether candidate i is
+    occluded — Algorithm 2 passes a constant vector, Algorithm 4 passes the
+    adaptive schedule δ_t(u, v_i) = 1 − d(u,v_i)/d(u,v_(t)).
+    """
+    L, d = cand_vecs.shape
+    occl = OCCLUSION_RULES[rule]
+
+    kept_vecs0 = jnp.zeros((max_keep, d), cand_vecs.dtype)
+    kept_d20 = jnp.full((max_keep,), jnp.inf, jnp.float32)
+    kept_ids0 = jnp.full((max_keep,), INVALID_ID, jnp.int32)
+
+    def body(i, state):
+        kept_vecs, kept_d2, kept_ids, count = state
+        v = cand_vecs[i]
+        d2_uv = cand_d2[i]
+        valid = (cand_ids[i] >= 0) & jnp.isfinite(d2_uv) & (d2_uv > 0.0)
+        # distances kept-node → candidate (padding rows give +inf d2_uw → False)
+        d2_wv = jnp.sum((kept_vecs - v[None, :]) ** 2, axis=-1)
+        occluded = jnp.any(
+            jnp.where(kept_ids >= 0, occl(d2_uv, kept_d2, d2_wv, deltas[i]), False)
+        )
+        take = valid & (~occluded) & (count < max_keep)
+        slot = jnp.minimum(count, max_keep - 1)
+        kept_vecs = jnp.where(take, kept_vecs.at[slot].set(v), kept_vecs)
+        kept_d2 = jnp.where(take, kept_d2.at[slot].set(d2_uv), kept_d2)
+        kept_ids = jnp.where(take, kept_ids.at[slot].set(cand_ids[i]), kept_ids)
+        count = count + take.astype(jnp.int32)
+        return kept_vecs, kept_d2, kept_ids, count
+
+    _, _, kept_ids, count = jax.lax.fori_loop(
+        0, L, body, (kept_vecs0, kept_d20, kept_ids0, jnp.int32(0))
+    )
+    return kept_ids, count
+
+
+def adaptive_deltas(cand_d2: jax.Array, t: int) -> jax.Array:
+    """Alg. 4's schedule  δ_t(u, v_i) = 1 − d(u, v_i) / d(u, v_(t)).
+
+    ``cand_d2`` must be ascending;  v_(t) is the t-th closest (1-indexed).
+    Negative on edges longer than d(u, v_(t)) — deliberately so (relaxed
+    long-range pruning), see Sec. 6.
+    """
+    t_idx = jnp.clip(t - 1, 0, cand_d2.shape[0] - 1)
+    d_t = jnp.sqrt(jnp.maximum(cand_d2[t_idx], 1e-30))
+    return 1.0 - jnp.sqrt(cand_d2) / d_t

@@ -1,0 +1,256 @@
+"""Algorithm 5 — Probing top-k ANN search on δ-EMQG.
+
+Two-tier traversal: *expansion* walks the graph using RaBitQ approximate
+distances (cheap, batched over a node's whole neighbor list); *probing*
+promotes the best approximate candidate to the exact tier only when the
+exact frontier has stopped improving.  The adaptive outer-``l`` loop and the
+α stop rule are inherited from Algorithm 3 and apply to the exact tier.
+
+Fixed-shape state (vmapped across the query batch, same discipline as
+``search.py``):
+
+  C_e — exact candidates  (ids, exact d², visited flags)   cap l_max+1
+  C_a — approx candidates (ids, approx d², probed flags)   cap l_max+1
+  T   — ring buffer of every id that ever entered either tier, for dedup
+
+Also provides AGS (approximate greedy search + exact rerank — SymphonyQG's
+search, the paper's δ-EMQG-AGS ablation).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import rabitq
+from .search import _merge_topc, make_exact_dist_fn
+from .types import INVALID_ID, EMQGIndex, SearchParams, SearchResult
+
+
+class _PState(NamedTuple):
+    ce_ids: jax.Array
+    ce_d2: jax.Array
+    ce_vis: jax.Array
+    ca_ids: jax.Array
+    ca_d2: jax.Array
+    ca_prb: jax.Array
+    t_ids: jax.Array
+    t_cnt: jax.Array
+    d2_last: jax.Array
+    l: jax.Array
+    n_dist: jax.Array
+    n_approx: jax.Array
+    n_hops: jax.Array
+    done: jax.Array
+    saturated: jax.Array
+
+
+def _probing_one(neighbors, exact_fn, approx_fn, q, ctx, start, p: SearchParams):
+    C = p.l_max + 1
+    M = neighbors.shape[1]
+    T = 2 * p.max_hops  # both tiers feed the ring
+
+    d2_s = exact_fn(q, start[None])[0]
+    st = _PState(
+        ce_ids=jnp.full((C,), INVALID_ID, jnp.int32).at[0].set(start),
+        ce_d2=jnp.full((C,), jnp.inf, jnp.float32).at[0].set(d2_s),
+        ce_vis=jnp.zeros((C,), jnp.bool_),
+        ca_ids=jnp.full((C,), INVALID_ID, jnp.int32),
+        ca_d2=jnp.full((C,), jnp.inf, jnp.float32),
+        ca_prb=jnp.zeros((C,), jnp.bool_),
+        t_ids=jnp.full((T,), INVALID_ID, jnp.int32).at[0].set(start),
+        t_cnt=jnp.int32(1),
+        d2_last=d2_s,
+        l=jnp.int32(min(max(p.l0, p.k), p.l_max)),
+        n_dist=jnp.int32(1),
+        n_approx=jnp.int32(0),
+        n_hops=jnp.int32(0),
+        done=jnp.bool_(False),
+        saturated=jnp.bool_(False),
+    )
+    pos = jnp.arange(C, dtype=jnp.int32)
+    alpha2 = jnp.float32(p.alpha * p.alpha)
+
+    def best_unvisited(ids, d2, vis, l):
+        mask = (pos < l) & (ids >= 0) & (~vis)
+        sel = jnp.argmin(jnp.where(mask, d2, jnp.inf))
+        has = jnp.any(mask)
+        return has, sel
+
+    def cond(s: _PState):
+        return (~s.done) & (s.n_hops < p.max_hops)
+
+    def expand(s: _PState, sel_u) -> _PState:
+        """Line 13-16: expand u with approximate distances into C_a."""
+        u_id = s.ce_ids[sel_u]
+        d2_u = s.ce_d2[sel_u]
+        ce_vis = s.ce_vis.at[sel_u].set(True)
+        nbrs = jnp.take(neighbors, jnp.maximum(u_id, 0), axis=0)
+        valid = nbrs >= 0
+        in_t = jnp.any(nbrs[:, None] == s.t_ids[None, :], axis=1)
+        in_ca = jnp.any(nbrs[:, None] == s.ca_ids[None, :], axis=1)
+        fresh = valid & ~in_t & ~in_ca
+        d2a = approx_fn(ctx, jnp.where(fresh, nbrs, INVALID_ID))
+        n_approx = s.n_approx + jnp.sum(fresh).astype(jnp.int32)
+        ca_ids, ca_d2, ca_prb = _merge_topc(
+            s.ca_ids, s.ca_d2, s.ca_prb,
+            jnp.where(fresh, nbrs, INVALID_ID),
+            jnp.where(fresh, d2a, jnp.inf),
+            jnp.zeros_like(fresh), C,
+        )
+        return s._replace(ce_vis=ce_vis, ca_ids=ca_ids, ca_d2=ca_d2,
+                          ca_prb=ca_prb, d2_last=d2_u, n_approx=n_approx,
+                          n_hops=s.n_hops + 1)
+
+    def probe(s: _PState, sel_w) -> _PState:
+        """Line 9-11: compute the exact distance of w, promote to C_e."""
+        w_id = s.ca_ids[sel_w]
+        ca_prb = s.ca_prb.at[sel_w].set(True)
+        t_ids = s.t_ids.at[s.t_cnt % T].set(w_id)
+        t_cnt = s.t_cnt + 1
+        d2_w = exact_fn(q, w_id[None])[0]
+        one_id = jnp.full((1,), 0, jnp.int32).at[0].set(w_id)
+        ce_ids, ce_d2, ce_vis = _merge_topc(
+            s.ce_ids, s.ce_d2, s.ce_vis,
+            one_id, d2_w[None], jnp.zeros((1,), jnp.bool_), C,
+        )
+        return s._replace(ce_ids=ce_ids, ce_d2=ce_d2, ce_vis=ce_vis,
+                          ca_prb=ca_prb, t_ids=t_ids, t_cnt=t_cnt,
+                          n_dist=s.n_dist + 1, n_hops=s.n_hops + 1)
+
+    def converged(s: _PState) -> _PState:
+        if not p.adaptive:
+            return s._replace(done=jnp.bool_(True))
+        d2_l = s.ce_d2[jnp.minimum(s.l - 1, C - 1)]
+        d2_k = s.ce_d2[p.k - 1]
+        stop = d2_l >= alpha2 * d2_k
+        at_cap = s.l >= p.l_max
+        return s._replace(
+            l=jnp.where(stop, s.l, jnp.minimum(s.l + p.l_step, p.l_max)),
+            done=stop | at_cap,
+            saturated=s.saturated | (at_cap & ~stop),
+        )
+
+    def body(s: _PState) -> _PState:
+        has_u, sel_u = best_unvisited(s.ce_ids, s.ce_d2, s.ce_vis, s.l)
+        has_w, sel_w = best_unvisited(s.ca_ids, s.ca_d2, s.ca_prb, s.l)
+        d2_u = jnp.where(has_u, s.ce_d2[sel_u], jnp.inf)
+        d2_w = jnp.where(has_w, s.ca_d2[sel_w], jnp.inf)
+        # NeedProbing (lines 22-28)
+        need_probe = jnp.where(
+            ~has_u,
+            has_w,
+            (d2_u > s.d2_last) & has_w & (d2_w < d2_u),
+        )
+        exhausted = ~has_u & ~has_w
+
+        def do_converged(s):
+            return converged(s)
+
+        def do_step(s):
+            return jax.lax.cond(
+                need_probe, lambda s_: probe(s_, sel_w), lambda s_: expand(s_, sel_u), s
+            )
+
+        return jax.lax.cond(exhausted, do_converged, do_step, s)
+
+    return jax.lax.while_loop(cond, body, st)
+
+
+@partial(jax.jit, static_argnames=("params", "use_kernel", "with_candidates"))
+def probing_search(
+    index: EMQGIndex,
+    queries: jax.Array,
+    params: SearchParams,
+    start: Optional[jax.Array] = None,
+    use_kernel: bool = False,
+    with_candidates: bool = False,
+):
+    """Batched Algorithm 5.  ``use_kernel`` routes the S₊ contraction through
+    the Pallas bitdot kernel (interpret-mode on CPU)."""
+    B = queries.shape[0]
+    g, codes = index.graph, index.codes
+    if start is None:
+        start = jnp.broadcast_to(g.medoid, (B,)).astype(jnp.int32)
+    exact_fn = make_exact_dist_fn(g.vectors)
+    bitdot_fn = None
+    if use_kernel:
+        from repro.kernels.bitdot.ops import bitdot as bitdot_fn  # lazy: optional dep
+
+    def approx_fn(ctx, ids):
+        return rabitq.estimate_sqdist(codes, ctx, ids, bitdot_fn=bitdot_fn)
+
+    def one(q, s0):
+        ctx = rabitq.prepare_query(codes, q)
+        return _probing_one(g.neighbors, exact_fn, approx_fn, q, ctx, s0, params)
+
+    st = jax.vmap(one)(queries, start)
+    k = params.k
+    res = SearchResult(
+        ids=st.ce_ids[:, :k],
+        dists=jnp.sqrt(jnp.maximum(st.ce_d2[:, :k], 0.0)),
+        n_dist_comps=st.n_dist,
+        n_approx_comps=st.n_approx,
+        n_hops=st.n_hops,
+        final_l=st.l,
+        saturated=st.saturated,
+    )
+    if with_candidates:
+        return res, st.ce_ids, jnp.sqrt(jnp.maximum(st.ce_d2, 0.0))
+    return res
+
+
+def error_bounded_probing_search(index: EMQGIndex, queries: jax.Array, k: int,
+                                 alpha: float, l_max: int = 256,
+                                 l_step: int = 1, max_hops: int = 4096,
+                                 **kw) -> SearchResult:
+    p = SearchParams(k=k, l0=k, l_max=l_max, l_step=l_step, alpha=alpha,
+                     adaptive=True, max_hops=max_hops)
+    return probing_search(index, queries, p, **kw)
+
+
+# ---------------------------------------------------------------------------
+# AGS — approximate greedy search (SymphonyQG), the δ-EMQG-AGS ablation:
+# plain Algorithm-1 traversal guided purely by approximate distances, then a
+# single exact rerank of the final candidate list.
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("params",))
+def ags_search(index: EMQGIndex, queries: jax.Array, params: SearchParams,
+               start: Optional[jax.Array] = None) -> SearchResult:
+    from .search import _search_one  # same engine, approx dist plug
+
+    B = queries.shape[0]
+    g, codes = index.graph, index.codes
+    if start is None:
+        start = jnp.broadcast_to(g.medoid, (B,)).astype(jnp.int32)
+    exact_fn = make_exact_dist_fn(g.vectors)
+
+    def one(q, s0):
+        ctx = rabitq.prepare_query(codes, q)
+
+        def approx_dist(q_, ids):
+            return rabitq.estimate_sqdist(codes, ctx, ids)
+
+        st, _ = _search_one(g.neighbors, approx_dist, q, s0, params,
+                            faithful_prune=False)
+        # exact rerank of the whole final buffer
+        d2 = exact_fn(q, st.cand_ids)
+        order = jnp.argsort(d2)
+        return (st.cand_ids[order], d2[order], st.n_dist, st.n_hops, st.l,
+                st.saturated)
+
+    ids, d2, n_approx, hops, final_l, sat = jax.vmap(one)(queries, start)
+    k = params.k
+    return SearchResult(
+        ids=ids[:, :k],
+        dists=jnp.sqrt(jnp.maximum(d2[:, :k], 0.0)),
+        n_dist_comps=jnp.full_like(n_approx, ids.shape[1]),  # rerank cost
+        n_approx_comps=n_approx,
+        n_hops=hops,
+        final_l=final_l,
+        saturated=sat,
+    )

@@ -1,0 +1,141 @@
+"""RaBitQ 1-bit-per-dimension quantization (Gao & Long, SIGMOD'24) — the
+distance-estimation substrate of δ-EMQG (Sec. 6 of the paper).
+
+Scheme
+------
+With centroid ``c`` and a random orthogonal rotation ``P``:
+
+    r   = P(v − c)             rotated residual
+    b   = sign bits of r       (packed 32 dims / uint32)
+    o   = r / ‖r‖              unit residual direction
+    x̄   = sign(r) / √d         unit quantized direction
+    ip_xo = ⟨x̄, o⟩ = Σ|rᵢ| / (√d·‖r‖)
+
+For a query with rotated unit residual ``q_u`` and the identity
+``⟨x̄, q_u⟩ = (2·S₊ − Σ q_u) / √d`` where ``S₊ = Σ_{bit=1} q_uᵢ``, the
+(asymptotically unbiased) RaBitQ estimator is
+
+    ⟨o, q_u⟩ ≈ ⟨x̄, q_u⟩ / ⟨x̄, o⟩
+    d²(v,q) ≈ ‖v−c‖² + ‖q−c‖² − 2‖v−c‖‖q−c‖·⟨o, q_u⟩
+
+TPU adaptation (recorded in DESIGN.md): the original FastScan evaluates
+``S₊`` through AVX2 4-bit LUT shuffles; here ``S₊`` is an MXU contraction of
+unpacked ±1 codes against the rotated query — the Pallas kernel in
+``repro.kernels.bitdot`` does the unpack in VREGs; this module holds the
+pure-jnp oracle and all scalar bookkeeping.  The query stays in f32 (the
+paper quantizes it to 4-bit for SIMD; on TPU that step buys nothing).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .types import RaBitQCodes, take_rows
+
+
+def random_rotation(dim: int, key: jax.Array) -> jax.Array:
+    """Haar-ish random orthogonal matrix via QR of a Gaussian."""
+    g = jax.random.normal(key, (dim, dim), jnp.float32)
+    qmat, r = jnp.linalg.qr(g)
+    # fix signs so the distribution is rotation-invariant
+    return qmat * jnp.sign(jnp.diagonal(r))[None, :]
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """bool[n, d] → uint32[n, ceil(d/32)] (bit j of word w = dim 32w+j)."""
+    n, d = bits.shape
+    words = (d + 31) // 32
+    pad = words * 32 - d
+    b = jnp.pad(bits.astype(jnp.uint32), ((0, 0), (0, pad)))
+    b = b.reshape(n, words, 32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))[None, None, :]
+    return jnp.sum(b * weights, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(codes: jax.Array, dim: int) -> jax.Array:
+    """uint32[n, W] → f32[n, dim] of ±1 signs."""
+    n, W = codes.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, None, :]
+    bits = (codes[:, :, None] >> shifts) & jnp.uint32(1)
+    signs = 2.0 * bits.astype(jnp.float32) - 1.0
+    return signs.reshape(n, W * 32)[:, :dim]
+
+
+@partial(jax.jit, static_argnames=("dim",))
+def _fit_jit(vectors: jax.Array, rotation: jax.Array, dim: int):
+    center = jnp.mean(vectors, axis=0)
+    r = (vectors - center[None, :]) @ rotation.T
+    norms = jnp.linalg.norm(r, axis=-1)
+    codes = pack_bits(r > 0)
+    ip_xo = jnp.sum(jnp.abs(r), axis=-1) / (
+        jnp.sqrt(jnp.float32(dim)) * jnp.maximum(norms, 1e-30)
+    )
+    return codes, norms, ip_xo, center
+
+
+def fit(vectors: jax.Array, key: jax.Array) -> RaBitQCodes:
+    vectors = jnp.asarray(vectors, jnp.float32)
+    dim = vectors.shape[1]
+    rotation = random_rotation(dim, key)
+    codes, norms, ip_xo, center = _fit_jit(vectors, rotation, dim)
+    return RaBitQCodes(codes=codes, norms=norms, ip_xo=ip_xo,
+                       rotation=rotation, center=center, dim=dim)
+
+
+class QueryCtx(NamedTuple):
+    """Per-query precomputation shared by every estimate during one search."""
+    q: jax.Array        # f32[d]   the raw query (for exact probes)
+    q_unit: jax.Array   # f32[d]   rotated unit residual direction
+    sum_q: jax.Array    # f32[]    Σ q_unit
+    norm_q: jax.Array   # f32[]    ‖q − c‖
+
+
+def prepare_query(codes: RaBitQCodes, q: jax.Array) -> QueryCtx:
+    r = (q - codes.center) @ codes.rotation.T
+    norm_q = jnp.linalg.norm(r)
+    q_unit = r / jnp.maximum(norm_q, 1e-30)
+    return QueryCtx(q=q, q_unit=q_unit, sum_q=jnp.sum(q_unit), norm_q=norm_q)
+
+
+def estimate_sqdist(codes: RaBitQCodes, ctx: QueryCtx, ids: jax.Array,
+                    bitdot_fn=None) -> jax.Array:
+    """Estimated squared distances f32[m] for node ids (INVALID → +inf).
+
+    ``bitdot_fn(code_rows uint32[m,W], q_unit f32[d]) → S₊ f32[m]`` defaults
+    to the pure-jnp oracle; the Pallas kernel is injected by the serving
+    layer (repro.kernels.bitdot.ops.bitdot).
+    """
+    rows = take_rows(codes.codes, ids)
+    if bitdot_fn is None:
+        signs = unpack_bits(rows, codes.dim)            # ±1
+        s_plus = 0.5 * (signs @ ctx.q_unit + ctx.sum_q)  # Σ_{bit=1} q_u
+    else:
+        s_plus = bitdot_fn(rows, ctx.q_unit)
+    d = jnp.float32(codes.dim)
+    ip_xq = (2.0 * s_plus - ctx.sum_q) / jnp.sqrt(d)
+    ip_xo = jnp.maximum(take_rows(codes.ip_xo[:, None], ids)[:, 0], 1e-6)
+    est_cos = ip_xq / ip_xo
+    nv = take_rows(codes.norms[:, None], ids)[:, 0]
+    d2 = nv * nv + ctx.norm_q * ctx.norm_q - 2.0 * nv * ctx.norm_q * est_cos
+    d2 = jnp.maximum(d2, 0.0)
+    return jnp.where(ids >= 0, d2, jnp.inf)
+
+
+def estimator_error_bound(codes: RaBitQCodes, ids: jax.Array,
+                          eps0: float = 1.9) -> jax.Array:
+    """Per-vector high-probability bound on |⟨o,q⟩ − est| (RaBitQ Thm 3.2):
+    ε ≈ ε₀·√((1 − ip_xo²) / ip_xo²) / √(d − 1).  ε₀≈1.9 ⇒ ~99.9% confidence."""
+    ip = jnp.maximum(take_rows(codes.ip_xo[:, None], ids)[:, 0], 1e-6)
+    d = jnp.float32(codes.dim)
+    return eps0 * jnp.sqrt(jnp.maximum(1.0 - ip * ip, 0.0) / (ip * ip)) / jnp.sqrt(d - 1.0)
+
+
+def exact_sqdist(vectors: jax.Array, q: jax.Array, ids: jax.Array) -> jax.Array:
+    rows = take_rows(vectors, ids)
+    d2 = jnp.sum((rows - q[None, :]) ** 2, axis=-1)
+    return jnp.where(ids >= 0, d2, jnp.inf)

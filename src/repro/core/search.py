@@ -1,0 +1,274 @@
+"""Batched, fixed-shape beam search on proximity graphs.
+
+Implements Algorithm 1 (greedy beam search) and Algorithm 3 (error-bounded
+adaptive top-k search) of the paper as a *single* parameterized engine,
+reformulated for lock-step execution on TPU:
+
+* The candidate set ``C`` is a fixed-width sorted array (ids, squared dists,
+  visited flags) of capacity ``l_max + 1``.  Algorithm 3's literal "keep top
+  l+1" prune is available as ``faithful_prune=True``, but read literally it
+  deadlocks the adaptive loop: when ``l`` grows into a slot whose candidate
+  was pruned away (or already visited), the stop test ``d(q,C[l]) ≥ α·d(q,C[k])``
+  sees ``+inf`` and fires *regardless of α*, contradicting the paper's own
+  Exp-6/7 (α must widen the search).  The default ``faithful_prune=False``
+  retains the full ``l_max+1`` buffer — the window ``l`` still gates which
+  candidates may be *expanded* and the stop rule still reads ``C[l]``/``C[k]``,
+  which realizes the intended adaptive behavior (and is how NSG-style pools
+  with a growing capacity behave).  Both variants are measured in
+  EXPERIMENTS.md §Perf.
+* The visited set ``T`` is a ring buffer of the expanded node ids (at most
+  one per hop, so ``max_hops`` bounds it).  Membership tests are vectorized
+  broadcast-compares — no hashing, no host round trips.
+* Per-query adaptive state (current ``l``, done flags, distance counters)
+  rides in the ``while_loop`` carry; ``vmap`` turns the per-query loop into a
+  batched lock-step loop where finished queries are masked no-ops.
+
+The distance evaluation is pluggable (``dist_fn``) so the δ-EMQG probing
+search (``probing.py``) and the Pallas kernels (``repro.kernels``) can swap
+in quantized / fused implementations without touching the control flow.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .types import (
+    INVALID_ID,
+    EMQGIndex,
+    GraphIndex,
+    SearchParams,
+    SearchResult,
+    take_rows,
+)
+
+
+class _State(NamedTuple):
+    cand_ids: jax.Array    # int32[C]
+    cand_d2: jax.Array     # f32[C]   squared dists, ascending (inf = empty)
+    cand_vis: jax.Array    # bool[C]
+    t_ids: jax.Array       # int32[T] expanded-node ring buffer
+    t_cnt: jax.Array       # int32
+    l: jax.Array           # int32    current candidate window (Alg. 3)
+    n_dist: jax.Array      # int32    exact distance evaluations
+    n_hops: jax.Array      # int32    expansions
+    done: jax.Array        # bool
+    saturated: jax.Array   # bool     l hit l_max before the α-rule fired
+
+
+def make_exact_dist_fn(vectors: jax.Array) -> Callable:
+    """dist_fn(q, ids) → squared distances f32[M] (invalid ids → +inf)."""
+
+    def dist_fn(q, ids):
+        rows = take_rows(vectors, ids)
+        diff = rows.astype(jnp.float32) - q.astype(jnp.float32)[None, :]
+        d2 = jnp.sum(diff * diff, axis=-1)
+        return jnp.where(ids >= 0, d2, jnp.inf)
+
+    return dist_fn
+
+
+def _merge_topc(ids_a, d2_a, vis_a, ids_b, d2_b, vis_b, cap: int):
+    """Merge two (id, d2, visited) lists, keep the ``cap`` smallest by d2."""
+    ids = jnp.concatenate([ids_a, ids_b])
+    d2 = jnp.concatenate([d2_a, d2_b])
+    vis = jnp.concatenate([vis_a, vis_b])
+    neg, idx = jax.lax.top_k(-d2, cap)
+    return ids[idx], -neg, vis[idx]
+
+
+def _search_one(
+    neighbors: jax.Array,       # int32[n, M]
+    dist_fn: Callable,
+    q: jax.Array,               # f32[d]
+    start: jax.Array,           # int32[]
+    p: SearchParams,
+    faithful_prune: bool,
+) -> tuple[_State, jax.Array]:
+    C = p.l_max + 1
+    M = neighbors.shape[1]
+    T = p.max_hops
+
+    d2_start = dist_fn(q, start[None])[0]
+    st = _State(
+        cand_ids=jnp.full((C,), INVALID_ID, jnp.int32).at[0].set(start),
+        cand_d2=jnp.full((C,), jnp.inf, jnp.float32).at[0].set(d2_start),
+        cand_vis=jnp.zeros((C,), jnp.bool_),
+        t_ids=jnp.full((T,), INVALID_ID, jnp.int32),
+        t_cnt=jnp.int32(0),
+        l=jnp.int32(min(max(p.l0, p.k), p.l_max)),
+        n_dist=jnp.int32(1),
+        n_hops=jnp.int32(0),
+        done=jnp.bool_(False),
+        saturated=jnp.bool_(False),
+    )
+
+    pos = jnp.arange(C, dtype=jnp.int32)
+    alpha2 = jnp.float32(p.alpha * p.alpha)
+
+    def in_window_unvisited(s: _State):
+        return (pos < s.l) & (s.cand_ids >= 0) & (~s.cand_vis)
+
+    def cond(s: _State):
+        return (~s.done) & (s.n_hops < p.max_hops)
+
+    def expand(s: _State) -> _State:
+        mask = in_window_unvisited(s)
+        sel = jnp.argmin(jnp.where(mask, s.cand_d2, jnp.inf))
+        u_id = s.cand_ids[sel]
+        cand_vis = s.cand_vis.at[sel].set(True)
+        t_ids = s.t_ids.at[s.t_cnt % T].set(u_id)
+        t_cnt = s.t_cnt + 1
+
+        nbrs = jnp.take(neighbors, jnp.maximum(u_id, 0), axis=0)
+        valid = nbrs >= 0
+        in_cand = jnp.any(nbrs[:, None] == s.cand_ids[None, :], axis=1)
+        in_vis = jnp.any(nbrs[:, None] == t_ids[None, :], axis=1)
+        fresh = valid & ~in_cand & ~in_vis
+
+        d2_new = dist_fn(q, jnp.where(fresh, nbrs, INVALID_ID))
+        n_dist = s.n_dist + jnp.sum(fresh).astype(jnp.int32)
+
+        cand_ids, cand_d2, cand_vis = _merge_topc(
+            s.cand_ids, s.cand_d2, cand_vis,
+            jnp.where(fresh, nbrs, INVALID_ID),
+            jnp.where(fresh, d2_new, jnp.inf),
+            jnp.zeros_like(fresh),
+            C,
+        )
+        if faithful_prune:
+            # Alg. 3 line 9: retain only the top l+1 candidates.
+            keep = pos <= s.l
+            cand_ids = jnp.where(keep, cand_ids, INVALID_ID)
+            cand_d2 = jnp.where(keep, cand_d2, jnp.inf)
+            cand_vis = jnp.where(keep, cand_vis, False)
+        return s._replace(
+            cand_ids=cand_ids, cand_d2=cand_d2, cand_vis=cand_vis,
+            t_ids=t_ids, t_cnt=t_cnt, n_dist=n_dist, n_hops=s.n_hops + 1,
+        )
+
+    def converged(s: _State) -> _State:
+        if not p.adaptive:
+            return s._replace(done=jnp.bool_(True))
+        # Alg. 3 line 11: stop iff d(q, C[l]) ≥ α · d(q, C[k]).
+        d2_l = s.cand_d2[jnp.minimum(s.l - 1, C - 1)]
+        d2_k = s.cand_d2[p.k - 1]
+        stop = d2_l >= alpha2 * d2_k
+        at_cap = s.l >= p.l_max
+        new_l = jnp.minimum(s.l + p.l_step, p.l_max)
+        return s._replace(
+            l=jnp.where(stop, s.l, new_l),
+            done=stop | at_cap,
+            saturated=s.saturated | (at_cap & ~stop),
+        )
+
+    def body(s: _State) -> _State:
+        has_unvisited = jnp.any(in_window_unvisited(s))
+        return jax.lax.cond(has_unvisited, expand, converged, s)
+
+    final = jax.lax.while_loop(cond, body, st)
+    return final, q
+
+
+@partial(jax.jit, static_argnames=("params", "faithful_prune", "with_candidates"))
+def search(
+    graph: GraphIndex,
+    queries: jax.Array,                 # f32[B, d]
+    params: SearchParams,
+    start: Optional[jax.Array] = None,  # int32[B] or None → medoid
+    faithful_prune: bool = False,
+    with_candidates: bool = False,
+):
+    """Batched Alg. 1 / Alg. 3 search.  Returns SearchResult (and optionally
+    the final candidate buffers for local-optimum analysis)."""
+    B = queries.shape[0]
+    if start is None:
+        start = jnp.broadcast_to(graph.medoid, (B,)).astype(jnp.int32)
+    dist_fn = make_exact_dist_fn(graph.vectors)
+
+    def one(q, s0):
+        st, _ = _search_one(graph.neighbors, dist_fn, q, s0, params, faithful_prune)
+        return st
+
+    st = jax.vmap(one)(queries, start)
+    k = params.k
+    res = SearchResult(
+        ids=st.cand_ids[:, :k],
+        dists=jnp.sqrt(jnp.maximum(st.cand_d2[:, :k], 0.0)),
+        n_dist_comps=st.n_dist,
+        n_approx_comps=jnp.zeros_like(st.n_dist),
+        n_hops=st.n_hops,
+        final_l=st.l,
+        saturated=st.saturated,
+    )
+    if with_candidates:
+        return res, st.cand_ids, jnp.sqrt(jnp.maximum(st.cand_d2, 0.0))
+    return res
+
+
+def greedy_search(graph: GraphIndex, queries: jax.Array, k: int, l: int,
+                  start: Optional[jax.Array] = None, max_hops: int = 512) -> SearchResult:
+    """Algorithm 1 with fixed candidate width l (the ablation δ-EMG-GS)."""
+    p = SearchParams(k=k, l0=l, l_max=l, adaptive=False, max_hops=max_hops)
+    return search(graph, queries, p, start=start)
+
+
+def error_bounded_search(graph: GraphIndex, queries: jax.Array, k: int,
+                         alpha: float, l_max: int = 256, l_step: int = 1,
+                         start: Optional[jax.Array] = None,
+                         max_hops: int = 2048, **kw) -> SearchResult:
+    """Algorithm 3: adaptive candidate width with the α stop rule."""
+    p = SearchParams(k=k, l0=k, l_max=l_max, l_step=l_step, alpha=alpha,
+                     adaptive=True, max_hops=max_hops)
+    return search(graph, queries, p, start=start, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Theorem-4 instrumentation (Exp-6 / Exp-7).
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def local_optimum_mask(graph: GraphIndex, queries: jax.Array, cand_ids: jax.Array):
+    """bool[B, C]: candidate c is a local optimum w.r.t. its query
+    (no out-neighbor of c is strictly closer to q than c)."""
+
+    def one(q, ids):
+        d2_c = jnp.where(
+            ids >= 0,
+            jnp.sum((take_rows(graph.vectors, ids) - q[None, :]) ** 2, axis=-1),
+            jnp.inf,
+        )
+
+        def check(cid, d2c):
+            nbrs = jnp.take(graph.neighbors, jnp.maximum(cid, 0), axis=0)
+            rows = take_rows(graph.vectors, nbrs)
+            d2n = jnp.sum((rows - q[None, :]) ** 2, axis=-1)
+            d2n = jnp.where(nbrs >= 0, d2n, jnp.inf)
+            return (cid >= 0) & jnp.all(d2n >= d2c)
+
+        return jax.vmap(check)(ids, d2_c)
+
+    return jax.vmap(one)(queries, cand_ids)
+
+
+def theorem4_delta_prime(graph: GraphIndex, queries: jax.Array, cand_ids: jax.Array,
+                         cand_dists: jax.Array, k: int, delta: float):
+    """Per-query (found: bool, δ′: f32) per Theorem 4.
+
+    δ′ = δ · d(q, u) / d(q, r_(k)) with u the *farthest* local-optimum node in
+    the final candidate set outside the returned top-k (wider search ⇒ larger
+    d(q,u) ⇒ tighter bound — Exp-7's observation).
+    """
+    is_opt = local_optimum_mask(graph, queries, cand_ids)
+    pos = jnp.arange(cand_ids.shape[1])[None, :]
+    outside = pos >= k
+    eligible = is_opt & outside & (cand_ids >= 0) & jnp.isfinite(cand_dists)
+    d_u = jnp.max(jnp.where(eligible, cand_dists, -jnp.inf), axis=1)
+    found = jnp.any(eligible, axis=1)
+    d_rk = cand_dists[:, k - 1]
+    delta_prime = jnp.where(found, delta * d_u / jnp.maximum(d_rk, 1e-30), 0.0)
+    return found, delta_prime

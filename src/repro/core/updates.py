@@ -1,0 +1,201 @@
+"""Streaming index maintenance: insert / delete on a live δ-EMG
+(FreshDiskANN-style), without full rebuilds.
+
+Insert (batched): search the current graph for each new point's
+neighborhood (the same candidate generation as Algorithm 4), prune with the
+adaptive occlusion rule, splice the new rows into the fixed-width adjacency,
+and add reverse edges under the degree cap.  The δ-EMG closure is restored
+*locally* — exactly the per-node operation one refinement iteration of
+Algorithm 4 performs, so quality matches a rebuilt graph up to the usual
+approximate-construction gap (tested).
+
+Delete (lazy + consolidate): deletions mark a tombstone bitmap consulted by
+``search_live`` (results filter tombstones; traversal still routes through
+them, preserving connectivity — the FreshDiskANN insight).  When tombstones
+exceed ``consolidate_frac``, ``consolidate`` splices each deleted node out
+by locally reconnecting its in-neighbors to its out-neighbors under the
+occlusion rule, then compacts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .build_approx import BuildParams, _prep_candidates, _select_block
+from .distances import medoid as find_medoid
+from .search import SearchParams, search
+from .types import GraphIndex, SearchResult
+
+
+@dataclasses.dataclass
+class LiveIndex:
+    """A δ-EMG plus mutation state (host-managed, device-resident arrays)."""
+
+    graph: GraphIndex
+    tombstones: np.ndarray            # bool[n]
+    params: BuildParams
+
+    @property
+    def n_live(self) -> int:
+        return int((~self.tombstones).sum())
+
+    @property
+    def frac_deleted(self) -> float:
+        return float(self.tombstones.mean())
+
+
+def as_live(graph: GraphIndex, params: Optional[BuildParams] = None) -> LiveIndex:
+    return LiveIndex(graph=graph,
+                     tombstones=np.zeros(graph.n, bool),
+                     params=params or BuildParams())
+
+
+def insert(live: LiveIndex, new_vectors: np.ndarray) -> LiveIndex:
+    """Batched insertion.  Returns a new LiveIndex (functional host state)."""
+    p = live.params
+    g = live.graph
+    vec_np = np.asarray(g.vectors)
+    new_vectors = np.asarray(new_vectors, np.float32)
+    m = new_vectors.shape[0]
+    n0 = g.n
+    M = g.max_degree
+    L = min(p.beam_width, n0)
+
+    # candidate generation on the current graph
+    sp = SearchParams(k=min(L, n0), l0=L, l_max=L, adaptive=False,
+                      max_hops=p.max_hops)
+    _, cand_ids, cand_dists = search(g, jnp.asarray(new_vectors), sp,
+                                     with_candidates=True)
+
+    all_vecs = np.concatenate([vec_np, new_vectors])
+    vectors = jnp.asarray(all_vecs)
+    new_ids = jnp.arange(n0, n0 + m, dtype=jnp.int32)
+    kept, cnt = _select_block(
+        vectors, new_ids, cand_ids, cand_dists,
+        t=min(p.t, L), rule=p.rule, max_keep=M, fixed_delta=p.delta)
+    kept, cnt = np.array(kept), np.array(cnt)
+
+    nbr = np.concatenate([np.asarray(g.neighbors),
+                          np.full((m, M), -1, np.int32)])
+    deg = (nbr >= 0).sum(1).astype(np.int32)
+    nbr[n0:] = kept
+    deg[n0:] = cnt
+
+    # reverse edges under the cap; replace the longest edge when full so new
+    # nodes always become reachable (same rule as connectivity repair)
+    for j in range(m):
+        u = n0 + j
+        for v in kept[j, : cnt[j]].tolist():
+            row = nbr[v, : deg[v]]
+            if (row == u).any():
+                continue
+            if deg[v] < M:
+                nbr[v, deg[v]] = u
+                deg[v] += 1
+            else:
+                d2row = ((all_vecs[nbr[v, :M]] - all_vecs[v]) ** 2).sum(-1)
+                worst = int(np.argmax(d2row))
+                if d2row[worst] > ((all_vecs[u] - all_vecs[v]) ** 2).sum():
+                    nbr[v, worst] = u
+
+    graph = GraphIndex(vectors=vectors, neighbors=jnp.asarray(nbr),
+                       medoid=g.medoid, kind=g.kind, delta=g.delta)
+    tomb = np.concatenate([live.tombstones, np.zeros(m, bool)])
+    return LiveIndex(graph=graph, tombstones=tomb, params=p)
+
+
+def delete(live: LiveIndex, ids) -> LiveIndex:
+    tomb = live.tombstones.copy()
+    tomb[np.asarray(ids)] = True
+    return LiveIndex(graph=live.graph, tombstones=tomb, params=live.params)
+
+
+def search_live(live: LiveIndex, queries, k: int, alpha: float = 1.2,
+                l_max: int = 128, **kw) -> SearchResult:
+    """Error-bounded search that filters tombstones from the results while
+    still routing through them.  Over-fetches k + #tombstone-margin."""
+    over = int(min(l_max, k + max(8, 4 * int(live.tombstones.sum() > 0) * k)))
+    p = SearchParams(k=over, l0=over, l_max=l_max, alpha=alpha,
+                     adaptive=True, max_hops=kw.pop("max_hops", 2048))
+    res = search(live.graph, jnp.asarray(queries), p, **kw)
+    ids = np.asarray(res.ids)
+    dists = np.asarray(res.dists)
+    out_ids = np.full((ids.shape[0], k), -1, np.int32)
+    out_d = np.full((ids.shape[0], k), np.inf, np.float32)
+    for b in range(ids.shape[0]):
+        keep = [(d, i) for d, i in zip(dists[b], ids[b])
+                if i >= 0 and not live.tombstones[i]][:k]
+        for j, (d, i) in enumerate(keep):
+            out_ids[b, j] = i
+            out_d[b, j] = d
+    return SearchResult(ids=jnp.asarray(out_ids), dists=jnp.asarray(out_d),
+                        n_dist_comps=res.n_dist_comps,
+                        n_approx_comps=res.n_approx_comps,
+                        n_hops=res.n_hops, final_l=res.final_l,
+                        saturated=res.saturated)
+
+
+def consolidate(live: LiveIndex) -> LiveIndex:
+    """Splice tombstoned nodes out: reconnect in-neighbors to the deleted
+    node's out-neighbors (occlusion-pruned), then compact ids."""
+    p = live.params
+    g = live.graph
+    vec_np = np.asarray(g.vectors)
+    nbr = np.asarray(g.neighbors).copy()
+    tomb = live.tombstones
+    n, M = nbr.shape
+    dead = set(np.where(tomb)[0].tolist())
+    if not dead:
+        return live
+
+    # in-neighbor lists of dead nodes
+    in_of_dead: dict[int, list[int]] = {d: [] for d in dead}
+    for u in range(n):
+        if u in dead:
+            continue
+        for v in nbr[u]:
+            if v >= 0 and int(v) in dead:
+                in_of_dead[int(v)].append(u)
+
+    vectors = g.vectors
+    touched = set()
+    for d, in_nbrs in in_of_dead.items():
+        repl = [int(x) for x in nbr[d] if x >= 0 and int(x) not in dead]
+        for u in in_nbrs:
+            row = [int(x) for x in nbr[u] if x >= 0 and int(x) not in dead]
+            merged = np.asarray(sorted(set(row + repl) - {u}), np.int64)
+            if merged.size == 0:
+                continue
+            ids = jnp.asarray(np.pad(merged, (0, max(0, 2 * M - merged.size)),
+                                     constant_values=-1)[: 2 * M].astype(np.int32))
+            d2 = np.linalg.norm(vec_np[np.maximum(np.asarray(ids), 0)]
+                                - vec_np[u], axis=1)
+            cand_ids, cand_dists = _prep_candidates(
+                vectors, jnp.asarray([u], jnp.int32), ids[None], 2 * M - 1)
+            kept, cnt = _select_block(
+                vectors, jnp.asarray([u], jnp.int32), cand_ids, cand_dists,
+                t=min(p.t, 2 * M - 1), rule=p.rule, max_keep=M,
+                fixed_delta=p.delta)
+            nbr[u] = np.array(kept)[0]
+            touched.add(u)
+
+    # compact: drop dead rows, remap ids
+    alive = np.where(~tomb)[0]
+    remap = -np.ones(n, np.int64)
+    remap[alive] = np.arange(alive.size)
+    new_nbr = nbr[alive]
+    valid = new_nbr >= 0
+    new_nbr = np.where(valid, remap[np.maximum(new_nbr, 0)], -1).astype(np.int32)
+    new_nbr[new_nbr == -1] = -1
+    new_vec = vec_np[alive]
+    med = find_medoid(new_vec)
+    graph = GraphIndex(vectors=jnp.asarray(new_vec),
+                       neighbors=jnp.asarray(new_nbr),
+                       medoid=jnp.int32(med), kind=g.kind, delta=g.delta)
+    return LiveIndex(graph=graph, tombstones=np.zeros(alive.size, bool),
+                     params=p)

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: packed RaBitQ sign-code contraction (FastScan analogue).
+
+The CPU paper evaluates RaBitQ estimates with AVX2 FastScan (4-bit LUT
+shuffles over transposed code layouts).  The TPU-native replacement keeps
+the 1-bit/dim packing in HBM (32× compression is what makes the code table
+HBM-resident at billion scale) and converts compute to what the TPU is good
+at:
+
+  1. VPU bit-unpack:  uint32[m, W] → {0,1} f32[m, 32·W] via broadcast-iota
+     shifts — ~3 VPU ops per 32 dims, no LUTs needed;
+  2. MXU contraction: bits[m, d] @ q[d]  →  S₊[m].
+
+``fused_estimate`` additionally applies the RaBitQ estimator algebra
+(norms / ip_xo / norm_q scalars) inside the same kernel so the serving hot
+loop reads HBM exactly once per code row and writes one f32 per candidate.
+
+Tiling: grid over row-tiles of ``TM`` codes; per-step VMEM =
+TM·W·4 (codes) + TM·32W·4 (unpacked) + 32W·4 (query) ≈ 0.6 MiB at
+TM=1024, d=128 — comfortably double-bufferable.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _unpack_tile(codes):
+    """uint32 (TM, W) → f32 (TM, 32·W) of {0,1}."""
+    TM, W = codes.shape
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (TM, W, 32), 2)
+    bits = (codes[:, :, None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(TM, W * 32).astype(jnp.float32)
+
+
+def _bitdot_kernel(q_ref, codes_ref, out_ref):
+    bits = _unpack_tile(codes_ref[...])
+    out_ref[:, 0] = jnp.dot(bits, q_ref[0], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "interpret"))
+def bitdot_pallas(codes: jax.Array, q_pad: jax.Array, tm: int = 256,
+                  interpret: bool = False) -> jax.Array:
+    """codes uint32[m, W] (m % tm == 0), q_pad f32[32·W] → S₊ f32[m]."""
+    m, W = codes.shape
+    out = pl.pallas_call(
+        _bitdot_kernel,
+        grid=(m // tm,),
+        in_specs=[
+            pl.BlockSpec((1, 32 * W), lambda i: (0, 0)),
+            pl.BlockSpec((tm, W), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        interpret=interpret,
+    )(q_pad[None, :], codes)
+    return out[:, 0]
+
+
+def _fused_estimate_kernel(q_ref, scal_ref, codes_ref, norms_ref, ipxo_ref,
+                           out_ref):
+    bits = _unpack_tile(codes_ref[...])
+    s_plus = jnp.dot(bits, q_ref[0], preferred_element_type=jnp.float32)
+    sum_q = scal_ref[0, 0]
+    norm_q = scal_ref[0, 1]
+    inv_sqrt_d = scal_ref[0, 2]
+    ip_xq = (2.0 * s_plus - sum_q) * inv_sqrt_d
+    est_cos = ip_xq / jnp.maximum(ipxo_ref[:, 0], 1e-6)
+    nv = norms_ref[:, 0]
+    d2 = nv * nv + norm_q * norm_q - 2.0 * nv * norm_q * est_cos
+    out_ref[:, 0] = jnp.maximum(d2, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("dim", "tm", "interpret"))
+def fused_estimate_pallas(codes: jax.Array, norms: jax.Array, ip_xo: jax.Array,
+                          q_pad: jax.Array, norm_q: jax.Array, dim: int,
+                          tm: int = 256, interpret: bool = False) -> jax.Array:
+    """Full RaBitQ distance estimate in one pass.  codes uint32[m, W]
+    (m % tm == 0), norms/ip_xo f32[m], q_pad f32[32·W] → est d² f32[m]."""
+    m, W = codes.shape
+    scal = jnp.stack([jnp.sum(q_pad), norm_q,
+                      1.0 / jnp.sqrt(jnp.float32(dim))])[None, :]
+    out = pl.pallas_call(
+        _fused_estimate_kernel,
+        grid=(m // tm,),
+        in_specs=[
+            pl.BlockSpec((1, 32 * W), lambda i: (0, 0)),
+            pl.BlockSpec((1, 3), lambda i: (0, 0)),
+            pl.BlockSpec((tm, W), lambda i: (i, 0)),
+            pl.BlockSpec((tm, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tm, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        interpret=interpret,
+    )(q_pad[None, :], scal, codes, norms[:, None], ip_xo[:, None])
+    return out[:, 0]

@@ -1,0 +1,61 @@
+"""Jitted public wrappers for the bitdot / fused-estimate kernels.
+
+Handles row-tile padding, INVALID_ID masking, interpret fallback on CPU and
+the ``use_ref`` escape hatch.  ``bitdot`` has the exact signature
+``core.rabitq.estimate_sqdist`` expects for its ``bitdot_fn`` plug.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .bitdot import bitdot_pallas, fused_estimate_pallas
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_rows(x: jax.Array, tm: int) -> jax.Array:
+    pad = (-x.shape[0]) % tm
+    if pad == 0:
+        return x
+    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "use_ref", "interpret"))
+def bitdot(codes: jax.Array, q_unit: jax.Array, tm: int = 256,
+           use_ref: bool = False, interpret: bool | None = None) -> jax.Array:
+    """codes uint32[m, W], q_unit f32[d] → S₊ f32[m]."""
+    if use_ref:
+        return ref.bitdot_ref(codes, q_unit)
+    interp = _on_cpu() if interpret is None else interpret
+    m, W = codes.shape
+    tm = min(tm, max(8, m))
+    q_pad = jnp.pad(q_unit.astype(jnp.float32), (0, 32 * W - q_unit.shape[0]))
+    out = bitdot_pallas(_pad_rows(codes, tm), q_pad, tm=tm, interpret=interp)
+    return out[:m]
+
+
+@functools.partial(jax.jit, static_argnames=("dim", "tm", "use_ref", "interpret"))
+def fused_estimate(codes: jax.Array, norms: jax.Array, ip_xo: jax.Array,
+                   q_unit: jax.Array, norm_q: jax.Array, dim: int,
+                   tm: int = 256, use_ref: bool = False,
+                   interpret: bool | None = None) -> jax.Array:
+    """Fused RaBitQ d² estimate.  codes uint32[m, W], norms/ip_xo f32[m]."""
+    if use_ref:
+        return ref.estimate_sqdist_ref(codes, norms, ip_xo, q_unit, norm_q, dim)
+    interp = _on_cpu() if interpret is None else interpret
+    m, W = codes.shape
+    tm = min(tm, max(8, m))
+    q_pad = jnp.pad(q_unit.astype(jnp.float32), (0, 32 * W - q_unit.shape[0]))
+    out = fused_estimate_pallas(
+        _pad_rows(codes, tm), _pad_rows(norms.astype(jnp.float32), tm),
+        _pad_rows(ip_xo.astype(jnp.float32), tm), q_pad,
+        norm_q.astype(jnp.float32), dim, tm=tm, interpret=interp)
+    return out[:m]

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the bitdot (RaBitQ FastScan-analogue) kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def unpack_bits_ref(codes: jnp.ndarray, dim: int) -> jnp.ndarray:
+    """uint32[m, W] → f32[m, dim] of {0, 1} bit values."""
+    m, W = codes.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, None, :]
+    bits = (codes[:, :, None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(m, W * 32)[:, :dim].astype(jnp.float32)
+
+
+def bitdot_ref(codes: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """S₊[i] = Σ_{j: bit_ij = 1} q_j   —  codes uint32[m, W], q f32[d]."""
+    bits = unpack_bits_ref(codes, q.shape[0])
+    return bits @ q.astype(jnp.float32)
+
+
+def estimate_sqdist_ref(codes, norms, ip_xo, q_unit, norm_q, dim) -> jnp.ndarray:
+    """Fused RaBitQ estimator oracle (matches core.rabitq.estimate_sqdist)."""
+    s_plus = bitdot_ref(codes, q_unit)
+    sum_q = jnp.sum(q_unit)
+    ip_xq = (2.0 * s_plus - sum_q) / jnp.sqrt(jnp.float32(dim))
+    est_cos = ip_xq / jnp.maximum(ip_xo, 1e-6)
+    d2 = norms * norms + norm_q * norm_q - 2.0 * norms * norm_q * est_cos
+    return jnp.maximum(d2, 0.0)

@@ -1,0 +1,128 @@
+"""Pallas TPU flash-attention (forward) — the §Perf-identified lever for the
+LM memory term.
+
+The pure-jnp blockwise attention in ``models/common.py`` spills its
+online-softmax state (acc, m, l) to HBM on every kv-block scan step — the
+loop-aware roofline shows that traffic dominating every LM train/prefill
+cell.  This kernel keeps the state in VMEM scratch across the kv-block grid
+dimension, so HBM traffic drops to the ideal
+``nq·(S·hd)`` K/V stream + one Q/O pass.
+
+Structure (standard TPU flash decomposition):
+  grid = (B·H, n_q_blocks, n_k_blocks)   — kv innermost, iterated
+                                            sequentially per (bh, qi)
+  q/o blocks   (1, bq, hd)  indexed by (bh, qi)
+  k/v blocks   (1, bk, hd)  indexed by (bh, ki)
+  scratch      acc (bq, hd) f32 · m (bq, 1) f32 · l (bq, 1) f32  (VMEM)
+
+Masking (causal / sliding-window / S-padding) is computed from global
+positions via iota inside the kernel; fully-masked kv blocks are skipped
+with ``pl.when``.  GQA is handled by the wrapper (KV broadcast to H).
+
+VMEM per step at bq=bk=512, hd=128: q+k+v+o ≈ 512 KiB + scratch 260 KiB —
+double-buffered comfortably inside 16 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, bq: int, bk: int, seq_len: int,
+                  causal: bool, window):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+
+    # skip kv blocks that are entirely masked out
+    run = jnp.bool_(True)
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + bq - 1)
+    if window is not None:
+        # block is dead if its newest key is older than the window's edge
+        run = jnp.logical_and(run, k_start + bk - 1 > q_start - window)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)                    # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                    # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # (bq, bk)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < seq_len
+        if causal:
+            mask = jnp.logical_and(mask, qpos >= kpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, qpos - kpos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]                                 # (bq,)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[:, 0] = l_ref[:, 0] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[:, 0] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "bq", "bk", "seq_len", "interpret"))
+def flash_attention_pallas(q, k, v, seq_len: int, causal: bool = True,
+                           window=None, bq: int = 512, bk: int = 512,
+                           interpret: bool = False):
+    """q/k/v [BH, S_pad, hd] (S_pad % bq == S_pad % bk == 0, KV already
+    broadcast to H) → out [BH, S_pad, hd]."""
+    BH, S_pad, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    grid = (BH, S_pad // bq, S_pad // bk)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, bq=bq, bk=bk, seq_len=seq_len,
+        causal=causal, window=window)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S_pad, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,48 @@
+"""Jitted wrapper for the flash-attention kernel: GQA broadcast, sequence
+padding to the block size, layout [B,S,H,hd] ⇄ [B·H,S,hd], interpret
+fallback on CPU, and the ``use_ref`` escape hatch."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flashattn import flash_attention_pallas
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "bq", "bk", "use_ref", "interpret"))
+def flash_attention(q, k, v, causal: bool = True, window=None,
+                    bq: int = 512, bk: int = 512, use_ref: bool = False,
+                    interpret: bool | None = None):
+    """q [B,S,H,hd], k/v [B,S,KV,hd] → [B,S,H,hd] (GQA broadcast inside)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    groups = H // KV
+    kb = jnp.repeat(k, groups, axis=2)
+    vb = jnp.repeat(v, groups, axis=2)
+    if use_ref:
+        return ref.attention_ref(q, kb, vb, causal=causal, window=window)
+    interp = _on_cpu() if interpret is None else interpret
+    bq = min(bq, max(8, S))
+    bk = min(bk, max(8, S))
+    pad = (-S) % max(bq, bk)
+    qt = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kt = jnp.pad(kb, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vt = jnp.pad(vb, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S_pad = S + pad
+    # [B, S, H, hd] → [B·H, S, hd]
+    def to_bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, S_pad, hd)
+    out = flash_attention_pallas(
+        to_bh(qt), to_bh(kt), to_bh(vt), seq_len=S, causal=causal,
+        window=window, bq=bq, bk=bk, interpret=interp)
+    out = out.reshape(B, H, S_pad, hd).transpose(0, 2, 1, 3)[:, :S]
+    return out

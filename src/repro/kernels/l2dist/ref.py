@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the l2dist kernels."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def batched_l2_ref(rows: jnp.ndarray, queries: jnp.ndarray) -> jnp.ndarray:
+    """rows f32[B, M, d], queries f32[B, d] → squared L2 f32[B, M]."""
+    diff = rows.astype(jnp.float32) - queries.astype(jnp.float32)[:, None, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def gather_l2_ref(base: jnp.ndarray, ids: jnp.ndarray, queries: jnp.ndarray) -> jnp.ndarray:
+    """base f32[n, d], ids int32[B, M] (≥0), queries f32[B, d] → f32[B, M]."""
+    rows = jnp.take(base, ids, axis=0)  # [B, M, d]
+    return batched_l2_ref(rows, queries)

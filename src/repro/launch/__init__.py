@@ -1,0 +1,2 @@
+"""Launch layer: production mesh, sharding policies, per-cell step builders,
+dry-run driver, and train/serve entry points."""

@@ -1,0 +1,158 @@
+"""Sharding policies: param-path → PartitionSpec rules per model family.
+
+The 2D policy (Megatron-TP × FSDP) for LMs:
+  * 'model' (tp)  — attention heads, FFN hidden, experts, vocab
+  * 'data'  (fsdp)— the complementary weight dim (params materialize
+                    per-layer via XLA's all-gather, overlapped by the
+                    latency-hiding scheduler)
+  * batch         — ('pod','data')
+Optimizer state (m/v) mirrors its parameter's spec automatically because the
+rules match on the *trailing* path component names.
+
+GNN params are replicated (KBs); edges shard over every mesh axis.
+RecSys embedding tables shard rows over 'model'; dense towers replicate;
+batch shards over all axes (the embedding gather is the only cross-axis op).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import all_axes, dp_axes
+
+
+def _path_names(path) -> list[str]:
+    return [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+
+
+def lm_param_spec(path, leaf, fsdp="data", tp="model") -> P:
+    names = _path_names(path)
+    name = names[-1]
+    nd = getattr(leaf, "ndim", 0)
+    inside_moe = "moe" in names
+
+    def lead(spec_tail):
+        """Prepend Nones for stacked [L, ...] params."""
+        return P(*([None] * (nd - len(spec_tail)) + list(spec_tail)))
+
+    if name == "embed":
+        # vocab replicated, d over tp: a tp-sharded gather needs no
+        # collectives; sharding V instead forces XLA into involuntary full
+        # rematerialization of the table (observed on moonshot/internlm2)
+        return P(None, tp)
+    if name == "unembed":
+        return P(None, tp)
+    if name in ("wq", "wk", "wv"):
+        return lead([fsdp, tp])
+    if name == "wo":
+        return lead([tp, fsdp])
+    if name == "router":
+        return lead([fsdp, None])
+    if inside_moe and name in ("w_gate", "w_up"):
+        return lead([tp, fsdp, None]) if nd >= 3 else lead([fsdp, None])
+    if inside_moe and name == "w_down":
+        return lead([tp, None, fsdp]) if nd >= 3 else lead([None, fsdp])
+    if name in ("w_gate", "w_up"):          # dense FFN / shared experts
+        return lead([fsdp, tp])
+    if name == "w_down":
+        return lead([tp, fsdp])
+    return P(*([None] * nd))                 # norms, biases, scalars
+
+
+def lm_param_spec_inference(path, leaf, fsdp="data", tp="model",
+                            big_moe: bool = False) -> P:
+    """Serving-time policy: NO optimizer state exists, so dense weights fit
+    replicated over 'data' (TP-only) — eliminating the per-layer FSDP
+    all-gathers that dominate the prefill/decode collective term.  Experts:
+    E over tp; for models whose per-device expert share would still not fit
+    (``big_moe``, e.g. llama4 ~50 GB/device TP-only), the expert ff dim
+    shards over 'data' — the einsums then contract against resident shards
+    and psum *activations* (MBs) instead of gathering *weights* (GBs)."""
+    names = _path_names(path)
+    name = names[-1]
+    nd = getattr(leaf, "ndim", 0)
+    inside_moe = "moe" in names
+
+    def lead(spec_tail):
+        return P(*([None] * (nd - len(spec_tail)) + list(spec_tail)))
+
+    if name in ("embed", "unembed"):
+        return P(None, tp)
+    if name in ("wq", "wk", "wv"):
+        return lead([None, tp])
+    if name == "wo":
+        return lead([tp, None])
+    if name == "router":
+        return lead([None, None])
+    if inside_moe and name in ("w_gate", "w_up"):
+        if nd >= 3:
+            # big_moe: keep the 2D training layout (E over tp, d over fsdp)
+            # — TP-only expert replication would not fit, and ff-over-fsdp
+            # conflicts with dp-sharded dispatch groups on a 2D mesh
+            return lead([tp, fsdp, None]) if big_moe else lead([tp, None, None])
+        return lead([None, None])
+    if inside_moe and name == "w_down":
+        if nd >= 3:
+            return lead([tp, None, fsdp]) if big_moe else lead([tp, None, None])
+        return lead([None, None])
+    if name in ("w_gate", "w_up"):
+        return lead([None, tp])
+    if name == "w_down":
+        return lead([tp, None])
+    return P(*([None] * nd))
+
+
+def gnn_param_spec(path, leaf, **kw) -> P:
+    return P(*([None] * getattr(leaf, "ndim", 0)))
+
+
+def recsys_param_spec(path, leaf, tp="model", **kw) -> P:
+    names = _path_names(path)
+    name = names[-1]
+    nd = getattr(leaf, "ndim", 0)
+    if name in ("emb", "lin", "item_emb", "cat_emb"):
+        return P(*([tp] + [None] * (nd - 1)))
+    return P(*([None] * nd))
+
+
+PARAM_SPEC_FNS = {
+    "lm": lm_param_spec,
+    "gnn": gnn_param_spec,
+    "recsys": recsys_param_spec,
+}
+
+
+def tree_specs(tree, spec_fn, **kw):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_fn(path, leaf, **kw), tree)
+
+
+def tree_shardings(mesh, tree, spec_fn, **kw):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, spec_fn(path, leaf, **kw)), tree)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(mesh, ndim: int, batch_axis: int = 0,
+               axes: Optional[tuple] = None) -> P:
+    axes = axes if axes is not None else dp_axes(mesh)
+    spec = [None] * ndim
+    spec[batch_axis] = axes
+    return P(*spec)
+
+
+def divisible(n: int, mesh, axes) -> bool:
+    from .mesh import axis_size
+    return n % axis_size(mesh, axes) == 0
+
+
+def pad_to(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult

@@ -1,0 +1,626 @@
+"""Cell builder: (architecture × input shape × mesh) → lowerable step.
+
+``build_cell`` returns a Cell carrying the jit-wrapped function, abstract
+ShapeDtypeStruct arguments, and input shardings — everything ``dryrun.py``
+needs to ``.lower().compile()`` and everything ``train.py`` needs to run for
+real (same code path; the only difference is whether the args are abstract).
+
+Sharding/memory decisions encoded here (see DESIGN.md §6):
+  * LM train: Megatron-TP('model') × FSDP('data'), batch over ('pod','data'),
+    microbatch accumulation sized so per-layer saved activations fit HBM.
+  * LM decode: KV cache head-dim over 'model'; batch over dp axes when
+    divisible, else (long_500k, batch=1) KV *sequence* over 'data'.
+  * GNN: params replicated, edges sharded over every axis.
+  * RecSys: tables row-sharded over 'model', batch over all axes.
+  * ANN (the paper): index rows over 'data', queries over the remaining
+    axes, exact global top-k merge.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchSpec, ShapeSpec
+from repro.core import BuildParams, SearchParams
+from repro.core.distributed import ShardedIndex, make_sharded_search
+from repro.core.types import EMQGIndex, GraphIndex, RaBitQCodes
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as rs
+from repro.models import transformer as tf
+from repro.optim import OptConfig
+from repro.train import TrainState, make_train_step
+
+from repro.models import hints
+
+from .mesh import all_axes, axis_size, dp_axes
+from .sharding import (
+    PARAM_SPEC_FNS,
+    lm_param_spec_inference,
+    pad_to,
+    tree_specs,
+)
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    fn: Callable                    # already jit-wrapped with shardings
+    args: tuple                     # abstract (or concrete) argument pytrees
+    description: str = ""
+    skip: Optional[str] = None
+    model_flops: float = 0.0        # 6·N·D (dense) / 6·N_active·D (MoE) etc.
+    mesh: Any = None
+    policy: Optional[dict] = None   # activation-sharding hints (models/hints)
+
+    def lower(self):
+        if self.policy is not None:
+            with hints.use_policy(self.mesh, self.policy):
+                return self.fn.lower(*self.args)
+        return self.fn.lower(*self.args)
+
+
+def _lm_policy(mesh, batch_sharded: bool = True, decode: bool = False) -> dict:
+    dp = dp_axes(mesh)
+    if decode:
+        # Decode has tiny activations and huge weights: run the MoE
+        # *weight-stationary* — dispatch_groups=1 frees the 'data' axis so
+        # the tile d/ff dims shard over it and the expert einsums contract
+        # against locally-resident weight shards (partial-sum + psum of KBs
+        # of activations) instead of FSDP-all-gathering ~2 GB of expert
+        # weights per MoE layer per token step.
+        pol = {
+            # weight-stationary decode: tile d shards over 'data' to match
+            # the resident expert shards (w_gate [E(tp), d(data), ff]) —
+            # the einsums contract locally and psum KBs of activations
+            "expert_tiles": P(None, "model", None, "data"),
+            "expert_hidden": P(None, "model", None, None),
+            "decode_q": P(dp, None, None) if batch_sharded else P(None, None, None),
+        }
+        if batch_sharded:
+            pol |= {"act_3d": P(dp, None, None), "logits": P(dp, None, "model")}
+        return pol
+    if not batch_sharded:
+        return {"expert_tiles": P(None, "model", None, None),
+                "expert_hidden": P(None, "model", None, None)}
+    return {
+        "act_3d": P(dp, None, None),
+        "act_heads": P(dp, None, "model", None),
+        "act_kv": P(dp, None, None, None),
+        "act_ff": P(dp, None, "model"),
+        "logits": P(dp, None, "model"),
+        "tokens_2d": P(dp, None),
+        "expert_tiles": P(dp, "model", None, None),
+        "expert_hidden": P(dp, "model", None, None),
+    }
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def _effective_accum(batch: int, requested: int, dp: int) -> int:
+    a = min(max(requested, 1), batch)
+    while a > 1 and not (batch % a == 0 and (batch // a) % dp == 0):
+        a -= 1
+    return max(a, 1)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_state_specs(cfg, opt_cfg, mesh):
+    params_shape = jax.eval_shape(lambda: tf.init(cfg, jax.random.PRNGKey(0)))
+    state_shape = jax.eval_shape(
+        lambda: TrainState.create(params_shape, opt_cfg))
+    spec_fn = PARAM_SPEC_FNS["lm"]
+    state_specs = tree_specs(state_shape, spec_fn)
+    return state_shape, state_specs
+
+
+def _dp_only(cfg) -> bool:
+    # sub-1B models: tensor parallelism buys nothing and its tiny uneven
+    # head shards (9 heads / 16 devices) cost collectives — fold the
+    # 'model' axis into data parallelism instead.
+    return cfg.param_count() < 1e9
+
+
+def _lm_train_cell(arch: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
+    cfg: tf.LMConfig = arch.model_cfg
+    B, S = shape.dims["batch"], shape.dims["seq"]
+    if _dp_only(cfg):
+        return _lm_train_cell_dp(arch, shape, mesh)
+    dp = axis_size(mesh, dp_axes(mesh))
+    cfg = dataclasses.replace(cfg, dispatch_groups=dp)
+    A = _effective_accum(B, shape.accum_steps, dp)
+    micro = B // A
+    opt_cfg = OptConfig(
+        state_dtype=jnp.bfloat16 if cfg.param_count() > 5e10 else jnp.float32,
+        total_steps=10000)
+    state_shape, state_specs = _lm_state_specs(cfg, opt_cfg, mesh)
+
+    def loss(params, batch):
+        return tf.loss_fn(cfg, params, batch["tokens"], batch["targets"])
+
+    big = cfg.param_count() > 5e10
+    step = make_train_step(loss, opt_cfg, accum_steps=A,
+                           accum_dtype=jnp.bfloat16 if big else None)
+    tok_shape = (A, micro, S) if A > 1 else (B, S)
+    batch_shape = {"tokens": sds(tok_shape, jnp.int32),
+                   "targets": sds(tok_shape, jnp.int32)}
+    bspec = P(None, dp_axes(mesh), None) if A > 1 else P(dp_axes(mesh), None)
+    batch_specs = {"tokens": bspec, "targets": bspec}
+
+    fn = jax.jit(step,
+                 in_shardings=(_named(mesh, state_specs),
+                               _named(mesh, batch_specs)),
+                 out_shardings=(_named(mesh, state_specs), None),
+                 donate_argnums=(0,))
+    # MODEL_FLOPS: 6·N_active·D for the step (fwd+bwd over all tokens)
+    flops = 6.0 * cfg.active_param_count() * B * S
+    return Cell(arch.id, shape.name, fn, (state_shape, batch_shape),
+                description=f"train accum={A} micro={micro}",
+                model_flops=flops, mesh=mesh, policy=_lm_policy(mesh))
+
+
+def _is_big_moe(cfg, mesh) -> bool:
+    # would TP-only expert weights overflow HBM? (bf16 bytes / tp shards)
+    if not cfg.is_moe:
+        return False
+    n_moe = sum(1 for i in range(cfg.n_layers)
+                if tf._is_moe_layer(cfg, i))
+    expert_bytes = n_moe * cfg.n_experts * 3 * cfg.d_model * cfg.d_ff * 2
+    return expert_bytes / mesh.shape["model"] > 8e9
+
+
+def _lm_train_cell_dp(arch: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
+    """Pure-DP variant for small models: batch shards over every axis,
+    params/optimizer replicated; the only collective is the gradient
+    all-reduce."""
+    cfg: tf.LMConfig = arch.model_cfg
+    B, S = shape.dims["batch"], shape.dims["seq"]
+    ax = all_axes(mesh)
+    if B % axis_size(mesh, ax) != 0:
+        # batch can't cover every axis (multi-pod world > batch): shard
+        # over the dp axes only, replicate over 'model'
+        ax = dp_axes(mesh)
+    world = axis_size(mesh, ax)
+    A = _effective_accum(B, shape.accum_steps, world)
+    micro = B // A
+    opt_cfg = OptConfig(state_dtype=jnp.float32, total_steps=10000)
+    params_shape = jax.eval_shape(lambda: tf.init(cfg, jax.random.PRNGKey(0)))
+    state_shape = jax.eval_shape(lambda: TrainState.create(params_shape, opt_cfg))
+    state_specs = jax.tree.map(lambda l: P(*([None] * l.ndim)), state_shape)
+
+    def loss(params, batch):
+        return tf.loss_fn(cfg, params, batch["tokens"], batch["targets"])
+
+    step = make_train_step(loss, opt_cfg, accum_steps=A)
+    tok_shape = (A, micro, S) if A > 1 else (B, S)
+    bspec = P(None, ax, None) if A > 1 else P(ax, None)
+    batch_shape = {"tokens": sds(tok_shape, jnp.int32),
+                   "targets": sds(tok_shape, jnp.int32)}
+    fn = jax.jit(step,
+                 in_shardings=(_named(mesh, state_specs),
+                               {"tokens": NamedSharding(mesh, bspec),
+                                "targets": NamedSharding(mesh, bspec)}),
+                 out_shardings=(_named(mesh, state_specs), None),
+                 donate_argnums=(0,))
+    policy = {"act_3d": P(ax, None, None), "logits": P(ax, None, None),
+              "act_heads": P(ax, None, None, None),
+              "act_kv": P(ax, None, None, None),
+              "act_ff": P(ax, None, None), "tokens_2d": P(ax, None)}
+    return Cell(arch.id, shape.name, fn, (state_shape, batch_shape),
+                description=f"train DP-only accum={A} micro={micro}",
+                model_flops=6.0 * cfg.active_param_count() * B * S,
+                mesh=mesh, policy=policy)
+
+
+def _lm_prefill_cell(arch: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
+    cfg: tf.LMConfig = arch.model_cfg
+    B, S = shape.dims["batch"], shape.dims["seq"]
+    cfg = dataclasses.replace(cfg, dispatch_groups=axis_size(mesh, dp_axes(mesh)))
+    big = _is_big_moe(cfg, mesh)
+    params_shape = jax.eval_shape(lambda: tf.init(cfg, jax.random.PRNGKey(0)))
+    # inference param specs: no optimizer state at serve time → dense
+    # weights replicate over 'data' (TP-only), killing the per-layer FSDP
+    # weight gathers the loop-aware analysis shows dominate serving
+    # collectives; big-MoE experts shard ff over 'data' (weight-stationary)
+    p_specs = tree_specs(params_shape, lm_param_spec_inference, big_moe=big)
+    toks = sds((B, S), jnp.int32)
+    fn = jax.jit(partial(tf.prefill, cfg),
+                 in_shardings=(_named(mesh, p_specs),
+                               NamedSharding(mesh, P(dp_axes(mesh), None))))
+    flops = 2.0 * cfg.active_param_count() * B * S
+    # sequence-parallel residual stream (Megatron-SP): between blocks the
+    # [B, S, d] activations shard S over 'model', so the TP combines become
+    # reduce-scatters and the residual memory drops tp-fold.
+    policy = dict(_lm_policy(mesh))
+    policy["act_3d"] = P(dp_axes(mesh), "model", None)
+    return Cell(arch.id, shape.name, fn, (params_shape, toks),
+                description=f"prefill seq-parallel infer-specs big={big}",
+                model_flops=flops, mesh=mesh, policy=policy)
+
+
+def _lm_decode_cell(arch: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
+    cfg: tf.LMConfig = arch.model_cfg
+    B, S = shape.dims["batch"], shape.dims["seq"]
+    dp = dp_axes(mesh)
+    dp_sz = axis_size(mesh, dp)
+    cfg = dataclasses.replace(cfg, dispatch_groups=1)  # weight-stationary EP
+    big = _is_big_moe(cfg, mesh)
+    params_shape = jax.eval_shape(lambda: tf.init(cfg, jax.random.PRNGKey(0)))
+    p_specs = tree_specs(params_shape, lm_param_spec_inference, big_moe=big)
+    cache_shape = jax.eval_shape(lambda: tf.init_cache(cfg, B, S))
+
+    batch_ok = B % dp_sz == 0 and B >= dp_sz
+    # cache head-dim shards over 'model'.  (S-over-'model' "flash-decoding"
+    # was measured and REFUTED: the per-token dynamic cache write at a
+    # runtime position cannot target a sharded S dim, so XLA reshards the
+    # whole cache every layer — loop-aware collective 1.9 s/step vs ~50 MB
+    # score all-reduces for the hd-sharded layout.  §Perf iteration log.)
+    kv_spec = (P(None, dp, None, None, "model") if batch_ok
+               else P(None, None, "data", None, "model"))
+    vec_spec = P(dp) if batch_ok else P(None)
+
+    def cache_spec(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name == "pos":
+            return vec_spec
+        return kv_spec
+
+    c_specs = jax.tree_util.tree_map_with_path(cache_spec, cache_shape)
+    toks = sds((B,), jnp.int32)
+    decode_policy = _lm_policy(mesh, batch_sharded=batch_ok, decode=True)
+    # pin the per-layer cache slice layout inside the scan body — without
+    # this the partitioner reshards the [B,S,KV,hd] slice every layer on
+    # GQA archs (observed 2 GB/layer of involuntary cache movement)
+    decode_policy["cache_kv"] = P(*kv_spec[1:])
+    fn = jax.jit(partial(tf.decode_step, cfg),
+                 in_shardings=(_named(mesh, p_specs), _named(mesh, c_specs),
+                               NamedSharding(mesh, vec_spec)),
+                 out_shardings=(None, _named(mesh, c_specs)),
+                 donate_argnums=(1,))
+    flops = 2.0 * cfg.active_param_count() * B  # one token per sequence
+    return Cell(arch.id, shape.name, fn, (params_shape, cache_shape, toks),
+                description=f"decode kv={'batch' if batch_ok else 'seq'}-sharded",
+                model_flops=flops, mesh=mesh, policy=decode_policy)
+
+
+
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _gnn_cell(arch: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
+    cfg: gnn_mod.GATConfig = arch.model_cfg[shape.name]
+    dims = shape.dims
+    ax = all_axes(mesh)
+    world = axis_size(mesh, ax)
+    opt_cfg = OptConfig(total_steps=1000)
+
+    dp = dp_axes(mesh)
+    dp_sz = axis_size(mesh, dp)
+    if shape.kind == "molecule":
+        n_nodes = dims["batch"] * dims["n_nodes"]
+        n_edges = pad_to(dims["batch"] * dims["n_edges"], dp_sz)
+        n_graphs = dims["batch"]
+    elif shape.kind == "minibatch":
+        n_nodes = dims["pad_nodes"]
+        n_edges = pad_to(dims["pad_edges"], dp_sz)
+        n_graphs = 0
+    else:
+        n_nodes = dims["n_nodes"]
+        n_edges = pad_to(dims["n_edges"], dp_sz)
+        n_graphs = 0
+
+    params_shape = jax.eval_shape(lambda: gnn_mod.init(cfg, jax.random.PRNGKey(0)))
+    state_shape = jax.eval_shape(lambda: TrainState.create(params_shape, opt_cfg))
+    state_specs = tree_specs(state_shape, PARAM_SPEC_FNS["gnn"])
+
+    batch_shape = {
+        "x": sds((n_nodes, dims["d_feat"]), jnp.float32),
+        "src": sds((n_edges,), jnp.int32),
+        "dst": sds((n_edges,), jnp.int32),
+    }
+    # edges shard over dp axes; node/head tensors shard heads over 'model'
+    # (constrained inside gnn._gat_layer via the policy below)
+    batch_specs = {"x": P(None, None), "src": P(dp), "dst": P(dp)}
+    if shape.kind == "molecule":
+        batch_shape |= {
+            "graph_ids": sds((n_nodes,), jnp.int32),
+            "labels": sds((n_graphs,), jnp.int32),
+            "label_mask": sds((n_graphs,), jnp.bool_),
+            "node_mask": sds((n_nodes,), jnp.bool_),
+        }
+        batch_specs |= {"graph_ids": P(None), "labels": P(None),
+                        "label_mask": P(None), "node_mask": P(None)}
+    else:
+        batch_shape |= {
+            "labels": sds((n_nodes,), jnp.int32),
+            "label_mask": sds((n_nodes,), jnp.bool_),
+        }
+        batch_specs |= {"labels": P(None), "label_mask": P(None)}
+
+    def loss(params, batch):
+        return gnn_mod.loss_fn(
+            cfg, params, batch["x"], batch["src"], batch["dst"],
+            batch["labels"], batch["label_mask"],
+            graph_ids=batch.get("graph_ids"), n_graphs=n_graphs,
+            node_mask=batch.get("node_mask"))
+
+    step = make_train_step(loss, opt_cfg)
+    fn = jax.jit(step,
+                 in_shardings=(_named(mesh, state_specs),
+                               _named(mesh, batch_specs)),
+                 out_shardings=(_named(mesh, state_specs), None),
+                 donate_argnums=(0,))
+    # model flops ≈ 3 × fwd; fwd ≈ E·H·(2d_msg) + N·d_in·H·d_out (SpMM+SDDMM)
+    d_out = cfg.d_hidden * cfg.n_heads
+    flops = 3.0 * (2.0 * n_edges * d_out * 2 + 2.0 * n_nodes *
+                   cfg.d_in * d_out + 2.0 * n_nodes * d_out * cfg.n_classes)
+    policy = {
+        "gnn_nodes_hd": P(None, "model", None),
+        "gnn_nodes_h": P(None, "model"),
+        "gnn_edges_h": P(dp, None),
+    }
+    return Cell(arch.id, shape.name, fn, (state_shape, batch_shape),
+                description=f"{shape.kind} E={n_edges}", model_flops=flops,
+                mesh=mesh, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+def _recsys_batch(arch: ArchSpec, B: int, for_train: bool):
+    cfg = arch.model_cfg
+    if arch.id == "fm":
+        b = {"sparse_ids": sds((B, cfg.n_sparse), jnp.int32)}
+    elif arch.id == "dcn-v2":
+        b = {"dense": sds((B, cfg.n_dense), jnp.float32),
+             "sparse_ids": sds((B, cfg.n_sparse), jnp.int32)}
+    elif arch.id == "dien":
+        T = cfg.seq_len
+        b = {"hist_items": sds((B, T), jnp.int32),
+             "hist_cats": sds((B, T), jnp.int32),
+             "hist_mask": sds((B, T), jnp.bool_),
+             "target_item": sds((B,), jnp.int32),
+             "target_cat": sds((B,), jnp.int32)}
+    elif arch.id == "mind":
+        T = cfg.seq_len
+        b = {"hist_items": sds((B, T), jnp.int32),
+             "hist_mask": sds((B, T), jnp.bool_)}
+        if for_train:
+            b |= {"target_item": sds((B,), jnp.int32),
+                  "neg_items": sds((B, cfg.n_neg), jnp.int32)}
+    else:
+        raise KeyError(arch.id)
+    if for_train and arch.id != "mind":
+        b["label"] = sds((B,), jnp.float32)
+    return b
+
+
+_RECSYS_LOSS = {
+    "fm": lambda cfg, p, b: rs.fm_loss(cfg, p, b),
+    "dcn-v2": lambda cfg, p, b: rs.dcn_loss(cfg, p, b),
+    "dien": lambda cfg, p, b: rs.dien_loss(cfg, p, b),
+    "mind": lambda cfg, p, b: rs.mind_loss(cfg, p, b),
+}
+
+_RECSYS_INIT = {
+    "fm": rs.fm_init, "dcn-v2": rs.dcn_init, "dien": rs.dien_init,
+    "mind": rs.mind_init,
+}
+
+
+def _recsys_model_flops(arch: ArchSpec, B: int) -> float:
+    cfg = arch.model_cfg
+    if arch.id == "fm":
+        return B * (2.0 * cfg.n_sparse * cfg.embed_dim * 2)
+    if arch.id == "dcn-v2":
+        d = cfg.d_input
+        mlp = sum(2.0 * a * b for a, b in
+                  zip((d,) + cfg.mlp_dims[:-1], cfg.mlp_dims))
+        return B * (cfg.n_cross * 2.0 * d * d + mlp)
+    if arch.id == "dien":
+        g, db, T = cfg.gru_dim, cfg.d_beh, cfg.seq_len
+        gru = 2.0 * T * 3 * (db * g + g * g) + 2.0 * T * 3 * (g * g + g * g)
+        mlp = 2.0 * (g + 2 * db) * cfg.mlp_dims[0] + 2.0 * cfg.mlp_dims[0] * cfg.mlp_dims[1]
+        return B * (gru + mlp)
+    if arch.id == "mind":
+        d, T, K = cfg.embed_dim, cfg.seq_len, cfg.n_interests
+        return B * (2.0 * T * d * d + cfg.routing_iters * 4.0 * T * K * d)
+    return 0.0
+
+
+def _recsys_train_cell(arch: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
+    cfg = arch.model_cfg
+    B = shape.dims["batch"]
+    ax = all_axes(mesh)
+    opt_cfg = OptConfig(total_steps=100000)
+    params_shape = jax.eval_shape(
+        lambda: _RECSYS_INIT[arch.id](cfg, jax.random.PRNGKey(0)))
+    state_shape = jax.eval_shape(lambda: TrainState.create(params_shape, opt_cfg))
+    state_specs = tree_specs(state_shape, PARAM_SPEC_FNS["recsys"])
+    batch_shape = _recsys_batch(arch, B, for_train=True)
+    batch_specs = jax.tree.map(
+        lambda s: P(*([ax] + [None] * (len(s.shape) - 1))), batch_shape)
+
+    loss = partial(_RECSYS_LOSS[arch.id], cfg)
+    step = make_train_step(lambda p, b: loss(p, b), opt_cfg)
+    fn = jax.jit(step,
+                 in_shardings=(_named(mesh, state_specs),
+                               _named(mesh, batch_specs)),
+                 out_shardings=(_named(mesh, state_specs), None),
+                 donate_argnums=(0,))
+    return Cell(arch.id, shape.name, fn, (state_shape, batch_shape),
+                description="train", model_flops=3 * _recsys_model_flops(arch, B))
+
+
+def _recsys_serve_cell(arch: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
+    cfg = arch.model_cfg
+    B = shape.dims["batch"]
+    ax = all_axes(mesh)
+    params_shape = jax.eval_shape(
+        lambda: _RECSYS_INIT[arch.id](cfg, jax.random.PRNGKey(0)))
+    p_specs = tree_specs(params_shape, PARAM_SPEC_FNS["recsys"])
+    batch_shape = _recsys_batch(arch, B, for_train=False)
+    batch_specs = jax.tree.map(
+        lambda s: P(*([ax] + [None] * (len(s.shape) - 1))), batch_shape)
+
+    if arch.id == "fm":
+        f = lambda p, b: rs.fm_forward(cfg, p, b["sparse_ids"])
+    elif arch.id == "dcn-v2":
+        f = lambda p, b: rs.dcn_forward(cfg, p, b["dense"], b["sparse_ids"])
+    elif arch.id == "dien":
+        f = lambda p, b: rs.dien_forward(cfg, p, b)
+    else:  # mind: user-interest inference
+        f = lambda p, b: rs.mind_user_interests(cfg, p, b["hist_items"],
+                                                b["hist_mask"])
+    fn = jax.jit(f, in_shardings=(_named(mesh, p_specs),
+                                  _named(mesh, batch_specs)))
+    return Cell(arch.id, shape.name, fn, (params_shape, batch_shape),
+                description="serve", model_flops=_recsys_model_flops(arch, B))
+
+
+def _recsys_retrieval_cell(arch: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
+    cfg = arch.model_cfg
+    B, C = shape.dims["batch"], shape.dims["n_candidates"]
+    ax = all_axes(mesh)
+    C = pad_to(C, axis_size(mesh, ax))
+    params_shape = jax.eval_shape(
+        lambda: _RECSYS_INIT[arch.id](cfg, jax.random.PRNGKey(0)))
+    p_specs = tree_specs(params_shape, PARAM_SPEC_FNS["recsys"])
+    cand = sds((C,), jnp.int32)
+    cand_spec = NamedSharding(mesh, P(ax))
+
+    if arch.id == "fm":
+        user = sds((B, cfg.n_sparse - 1), jnp.int32)
+        f = lambda p, u, c: rs.fm_retrieval(cfg, p, u, c, k=100)
+        args = (params_shape, user, cand)
+        ins = (_named(mesh, p_specs), NamedSharding(mesh, P(None, None)), cand_spec)
+        flops = B * C * 2.0 * cfg.embed_dim
+    elif arch.id == "dcn-v2":
+        dense = sds((B, cfg.n_dense), jnp.float32)
+        user = sds((B, cfg.n_sparse - 1), jnp.int32)
+        f = lambda p, d, u, c: rs.dcn_retrieval(cfg, p, d, u, c, k=100)
+        args = (params_shape, dense, user, cand)
+        ins = (_named(mesh, p_specs), NamedSharding(mesh, P(None, None)),
+               NamedSharding(mesh, P(None, None)), cand_spec)
+        flops = _recsys_model_flops(arch, C)
+    elif arch.id == "dien":
+        batch_shape = {"hist_items": sds((B, cfg.seq_len), jnp.int32),
+                       "hist_cats": sds((B, cfg.seq_len), jnp.int32),
+                       "hist_mask": sds((B, cfg.seq_len), jnp.bool_)}
+        f = lambda p, b, c: rs.dien_retrieval(cfg, p, b, c, k=100)
+        args = (params_shape, batch_shape, cand)
+        ins = (_named(mesh, p_specs),
+               jax.tree.map(lambda s: NamedSharding(mesh, P(None, None)),
+                            batch_shape), cand_spec)
+        flops = _recsys_model_flops(arch, C)
+    else:  # mind
+        batch_shape = {"hist_items": sds((B, cfg.seq_len), jnp.int32),
+                       "hist_mask": sds((B, cfg.seq_len), jnp.bool_)}
+        f = lambda p, b, c: rs.mind_retrieval(cfg, p, b["hist_items"],
+                                              b["hist_mask"], c, k=100)
+        args = (params_shape, batch_shape, cand)
+        ins = (_named(mesh, p_specs),
+               jax.tree.map(lambda s: NamedSharding(mesh, P(None, None)),
+                            batch_shape), cand_spec)
+        flops = (_recsys_model_flops(arch, B)
+                 + B * cfg.n_interests * C * 2.0 * cfg.embed_dim)
+    fn = jax.jit(f, in_shardings=ins)
+    return Cell(arch.id, shape.name, fn, args,
+                description=f"retrieval C={C}", model_flops=flops)
+
+
+# ---------------------------------------------------------------------------
+# ANN (the paper's own config) cells
+# ---------------------------------------------------------------------------
+
+def abstract_sharded_emqg(n_total: int, dim: int, M: int, n_shards: int
+                          ) -> ShardedIndex:
+    n_local = pad_to(int(math.ceil(n_total / n_shards)), 8)
+    W = (dim + 31) // 32
+    graph = GraphIndex(
+        vectors=sds((n_shards, n_local, dim), jnp.float32),
+        neighbors=sds((n_shards, n_local, M), jnp.int32),
+        medoid=sds((n_shards,), jnp.int32),
+        kind="delta_emqg", delta=0.0)
+    codes = RaBitQCodes(
+        codes=sds((n_shards, n_local, W), jnp.uint32),
+        norms=sds((n_shards, n_local), jnp.float32),
+        ip_xo=sds((n_shards, n_local), jnp.float32),
+        rotation=sds((n_shards, dim, dim), jnp.float32),
+        center=sds((n_shards, dim), jnp.float32),
+        dim=dim)
+    return ShardedIndex(index=EMQGIndex(graph=graph, codes=codes),
+                        offsets=sds((n_shards,), jnp.int32), n_total=n_total)
+
+
+def _ann_serve_cell(arch: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
+    mc = arch.model_cfg
+    B = shape.dims["batch"]
+    shard_axes = ("data",)
+    q_axes = tuple(a for a in mesh.axis_names if a not in shard_axes)
+    n_shards = axis_size(mesh, shard_axes)
+    sidx = abstract_sharded_emqg(mc["n"], mc["dim"],
+                                 mc["build"].max_degree, n_shards)
+    queries = sds((B, mc["dim"]), jnp.float32)
+    run = make_sharded_search(mesh, shard_axes=shard_axes,
+                              query_axis=q_axes or None,
+                              merge="all_gather", quantized=True)
+    params: SearchParams = mc["search"]
+    fn = jax.jit(lambda s, q: run(s, q, params))
+    # model flops: probing search work ≈ hops·M·(bit-unpack+dot) + exact d²;
+    # report the exact-rerank-equivalent dense cost as the useful-work floor
+    flops = B * n_shards * params.l_max * 2.0 * mc["dim"]
+    return Cell(arch.id, shape.name, fn, (sidx, queries),
+                description=f"δ-EMQG sharded serve S={n_shards}",
+                model_flops=flops)
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
+    if shape.skip:
+        return Cell(arch.id, shape.name, fn=None, args=(), skip=shape.skip)
+    if arch.family == "lm":
+        if shape.kind == "train":
+            return _lm_train_cell(arch, shape, mesh)
+        if shape.kind == "prefill":
+            return _lm_prefill_cell(arch, shape, mesh)
+        if shape.kind == "decode":
+            return _lm_decode_cell(arch, shape, mesh)
+    if arch.family == "gnn":
+        return _gnn_cell(arch, shape, mesh)
+    if arch.family == "recsys":
+        if shape.kind == "train":
+            return _recsys_train_cell(arch, shape, mesh)
+        if shape.kind == "serve":
+            return _recsys_serve_cell(arch, shape, mesh)
+        if shape.kind == "retrieval":
+            return _recsys_retrieval_cell(arch, shape, mesh)
+    if arch.family == "ann":
+        return _ann_serve_cell(arch, shape, mesh)
+    raise KeyError(f"no builder for {arch.family}/{shape.kind}")

@@ -1,0 +1,6 @@
+"""Model zoo: the 10 assigned architectures.
+
+transformer.py — 5 LM archs (dense + MoE decoder LMs)
+gnn.py         — gat-cora (+ the 4 graph shapes)
+recsys.py      — mind / dien / fm / dcn-v2 (+ embedding substrate)
+"""

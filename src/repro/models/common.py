@@ -1,0 +1,252 @@
+"""Shared neural building blocks (pure JAX — no flax/haiku dependency).
+
+Parameters are plain nested dicts of jnp arrays; initializers take an
+explicit PRNG key.  Everything here is shape-polymorphic and dtype-explicit
+so the same code path serves tiny smoke configs and the 400B dry-run
+configs.
+
+Key pieces:
+  * rms_norm / swiglu / dense init helpers
+  * rope — rotary position embeddings (half-rotation convention)
+  * flash_attention — memory-O(S·block) online-softmax attention in pure
+    jnp (lax.scan over KV blocks).  This is what keeps the 4k-train and
+    32k-prefill dry-runs inside HBM without a custom kernel: XLA never
+    materializes the S×S score matrix.  Supports causal and sliding-window
+    masking and GQA head groups.
+  * decode_attention — single-token attention against a KV cache.
+  * gru_cell / gru_scan — for DIEN.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+DEFAULT_DTYPE = jnp.bfloat16
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * gamma.astype(jnp.float32)).astype(dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x [..., S, H, hd], positions [..., S] (int) → same shape."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash-style attention (pure jnp, blockwise online softmax)
+# ---------------------------------------------------------------------------
+
+def flash_attention(
+    q: jax.Array,             # [B, S, H, hd]
+    k: jax.Array,             # [B, S, KV, hd]
+    v: jax.Array,             # [B, S, KV, hd]
+    causal: bool = True,
+    window: Optional[int] = None,   # sliding-window size (None → full)
+    block_q: int = 512,
+    block_k: int = 512,
+) -> jax.Array:
+    """Online-softmax attention; GQA via KV-head broadcast; O(S·block) memory."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    groups = H // KV
+    scale = 1.0 / math.sqrt(hd)
+
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    nq, nk = -(-S // block_q), -(-S // block_k)
+    pad_q, pad_k = nq * block_q - S, nk * block_k - S
+    # keep K/V in their storage dtype (a full-sequence f32 upcast would
+    # double the 32k-prefill working set); accumulate in f32 via
+    # preferred_element_type inside the per-block einsums.
+    # GQA broadcast happens HERE, outside the block loops: a repeat inside
+    # the kv scan makes its backward emit a cross-'model' grad reduce per
+    # block (~8 MB × n_q·n_k blocks per layer — dominated the smollm
+    # collective term); hoisted, it is one reduce per layer.
+    qf = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kf = jnp.pad(jnp.repeat(k, groups, axis=2), ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vf = jnp.pad(jnp.repeat(v, groups, axis=2), ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+
+    # [B, nq, bq, H, hd] / [B, nk, bk, H, hd]
+    qf = qf.reshape(B, nq, block_q, H, hd)
+    kf = kf.reshape(B, nk, block_k, H, hd)
+    vf = vf.reshape(B, nk, block_k, H, hd)
+
+    q_pos = jnp.arange(nq * block_q).reshape(nq, block_q)
+    k_pos = jnp.arange(nk * block_k).reshape(nk, block_k)
+
+    def per_qblock(qi, qblk):
+        # qblk [B, bq, H, hd]
+        qpos = q_pos[qi]                                     # [bq]
+
+        def kv_step(carry, inp):
+            acc, m, denom = carry
+            kb, vb, kpos = inp                                # [B,bk,H,hd],[bk]
+            # scores [B, bq, H, bk]
+            s = jnp.einsum("bqhd,bkhd->bqhk", qblk, kb,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((block_q, block_k), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                mask &= (qpos[:, None] - kpos[None, :]) < window
+            mask &= (kpos < S)[None, :]
+            s = jnp.where(mask[None, :, None, :], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard fully-masked rows (m_new = -inf)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask[None, :, None, :], p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bqhk,bkhd->bqhd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            denom = denom * corr + jnp.sum(p, axis=-1)
+            return (acc, m_safe, denom), None
+
+        acc0 = jnp.zeros((B, block_q, H, hd), jnp.float32)
+        m0 = jnp.full((B, block_q, H), -jnp.inf, jnp.float32)
+        d0 = jnp.zeros((B, block_q, H), jnp.float32)
+        (acc, _, denom), _ = jax.lax.scan(
+            kv_step, (acc0, m0, d0),
+            (kf.swapaxes(0, 1), vf.swapaxes(0, 1), k_pos))
+        return acc / jnp.maximum(denom[..., None], 1e-30)
+
+    out = jax.lax.map(lambda args: per_qblock(*args),
+                      (jnp.arange(nq), qf.swapaxes(0, 1)))    # [nq, B, bq, H, hd]
+    out = out.swapaxes(0, 1).reshape(B, nq * block_q, H, hd)[:, :S]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,        # [B, H, hd]      one new token per sequence
+    k_cache: jax.Array,  # [B, S, KV, hd]
+    v_cache: jax.Array,  # [B, S, KV, hd]
+    pos: jax.Array,      # [B] int32 — number of valid cache entries
+    window: Optional[int] = None,
+) -> jax.Array:
+    B, S, KV, hd = k_cache.shape
+    H = q.shape[1]
+    groups = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    # grouped GQA einsum: no repeat — materializing a [B,S,H,hd] broadcast
+    # of the cache costs groups× memory and forces the partitioner to
+    # reshard the multi-GB cache (hd→heads) every layer.  The grouped form
+    # contracts the hd-sharded cache locally; only the [B,KV,G,S] scores
+    # and [B,H,hd] outputs cross the 'model' axis.
+    q3 = q.reshape(B, KV, groups, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", q3.astype(k_cache.dtype), k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    idx = jnp.arange(S)[None, :]
+    mask = idx < pos[:, None]
+    if window is not None:
+        mask &= idx >= (pos[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GRU (for DIEN) — scan over time
+# ---------------------------------------------------------------------------
+
+def gru_init(key, d_in: int, d_h: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_x": dense_init(k1, d_in, 3 * d_h, dtype),
+        "w_h": dense_init(k2, d_h, 3 * d_h, dtype),
+        "b": jnp.zeros((3 * d_h,), dtype),
+    }
+
+
+def gru_cell(p: Params, h: jax.Array, x: jax.Array,
+             att: Optional[jax.Array] = None) -> jax.Array:
+    """One GRU step; ``att`` (per-example scalar) turns it into AUGRU
+    (attention-update gate, DIEN eq. 5)."""
+    zx = x @ p["w_x"] + h @ p["w_h"] + p["b"]
+    z, r, n = jnp.split(zx, 3, axis=-1)
+    z = jax.nn.sigmoid(z)
+    r = jax.nn.sigmoid(r)
+    n = jnp.tanh(x @ p["w_x"][:, -n.shape[-1]:] + (r * h) @ p["w_h"][:, -n.shape[-1]:]
+                 + p["b"][-n.shape[-1]:])
+    if att is not None:
+        z = z * att[..., None]
+    return (1.0 - z) * h + z * n
+
+
+def gru_scan(p: Params, xs: jax.Array, h0: Optional[jax.Array] = None,
+             atts: Optional[jax.Array] = None) -> tuple[jax.Array, jax.Array]:
+    """xs [B, T, d_in] → (all states [B, T, d_h], final state [B, d_h])."""
+    B, T, _ = xs.shape
+    d_h = p["w_h"].shape[0]
+    if h0 is None:
+        h0 = jnp.zeros((B, d_h), xs.dtype)
+
+    def step(h, inp):
+        if atts is None:
+            x = inp
+            h = gru_cell(p, h, x)
+        else:
+            x, a = inp
+            h = gru_cell(p, h, x, a)
+        return h, h
+
+    inputs = xs.swapaxes(0, 1) if atts is None else (xs.swapaxes(0, 1), atts.swapaxes(0, 1))
+    hT, hs = jax.lax.scan(step, h0, inputs)
+    return hs.swapaxes(0, 1), hT
+
+
+def mlp_init(key, dims: list[int], dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        f"w{i}": dense_init(keys[i], dims[i], dims[i + 1], dtype)
+        for i in range(len(dims) - 1)
+    } | {
+        f"b{i}": jnp.zeros((dims[i + 1],), dtype)
+        for i in range(len(dims) - 1)
+    }
+
+
+def mlp_apply(p: Params, x: jax.Array, n_layers: int,
+              final_act: bool = False) -> jax.Array:
+    for i in range(n_layers):
+        x = x @ p[f"w{i}"] + p[f"b{i}"]
+        if i < n_layers - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x

@@ -1,0 +1,109 @@
+"""Mixture-of-Experts FFN layer (capacity-based, grouped sort-dispatch).
+
+Top-k routing with a fixed per-expert capacity.  Dispatch is computed
+within ``n_groups`` independent token groups (launchers set n_groups = the
+data-parallel world so each DP shard dispatches only its own tokens — the
+same contract real EP systems use):
+
+  * every sort/searchsorted/scatter is *batched over the group axis*, so
+    under pjit the group axis shards over ('pod','data') and no global
+    argsort (which XLA SPMD can only realize by full replication —
+    observed 25+ GB of involuntary all-gathers on the 16B MoE) ever
+    appears;
+  * capacity is per group: C = ceil(T_g·k/E · cf) — token drop behavior is
+    then *identical* between a sharded run and a single-host run with the
+    same group count (deterministic parity for tests).
+
+Expert tiles [G, E, C, d] shard G over dp and E over 'model' (expert
+parallelism); XLA inserts the all-to-all at the tile boundary.
+
+Aux outputs: Switch load-balance loss, router z-loss, drop fraction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+from .hints import constrain
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], d_model, n_experts, jnp.float32),
+        "w_gate": jax.vmap(lambda k: dense_init(k, d_model, d_ff, dtype))(
+            jax.random.split(ks[1], n_experts)),
+        "w_up": jax.vmap(lambda k: dense_init(k, d_model, d_ff, dtype))(
+            jax.random.split(ks[2], n_experts)),
+        "w_down": jax.vmap(lambda k: dense_init(k, d_ff, d_model, dtype))(
+            jax.random.split(ks[3], n_experts)),
+    }
+
+
+def moe_apply(p: dict, x: jax.Array, top_k: int,
+              capacity_factor: float = 1.25, n_groups: int = 1):
+    """x [T, d] → (out [T, d], aux).  T must divide by n_groups."""
+    T, d = x.shape
+    E = p["router"].shape[1]
+    G = max(min(n_groups, T), 1)
+    while T % G:
+        G -= 1
+    Tg = T // G
+    C = max(int(((Tg * top_k + E - 1) // E) * capacity_factor), 8)
+    C = min(C, Tg * top_k)
+
+    xg = x.reshape(G, Tg, d)
+    logits = xg.astype(jnp.float32) @ p["router"]               # [G, Tg, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)          # [G, Tg, k]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # ---- dispatch (batched over groups) ----
+    flat_expert = expert_ids.reshape(G, Tg * top_k)
+    flat_token = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tg), top_k)[None, :], (G, Tg * top_k))
+    flat_gate = gate_vals.reshape(G, Tg * top_k)
+    order = jnp.argsort(flat_expert, axis=1, stable=True)
+    sorted_expert = jnp.take_along_axis(flat_expert, order, axis=1)
+    sorted_token = jnp.take_along_axis(flat_token, order, axis=1)
+    sorted_gate = jnp.take_along_axis(flat_gate, order, axis=1)
+    first_pos = jax.vmap(
+        lambda se: jnp.searchsorted(se, se, side="left"))(sorted_expert)
+    pos_in_group = jnp.arange(Tg * top_k)[None, :] - first_pos
+    keep = pos_in_group < C
+    slot = jnp.where(keep, sorted_expert * C + pos_in_group, E * C)
+
+    gathered = jnp.take_along_axis(xg, sorted_token[:, :, None], axis=1)
+    gathered = jnp.where(keep[:, :, None], gathered, 0.0)
+    buf = jnp.zeros((G, E * C + 1, d), x.dtype)
+    buf = jax.vmap(lambda b, s, v: b.at[s].set(v))(buf, slot, gathered)
+    tiles = constrain(buf[:, : E * C].reshape(G, E, C, d), "expert_tiles")
+
+    # ---- expert computation ----
+    g = jnp.einsum("gecd,edf->gecf", tiles, p["w_gate"])
+    u = jnp.einsum("gecd,edf->gecf", tiles, p["w_up"])
+    h = constrain(jax.nn.silu(g) * u, "expert_hidden")
+    y = constrain(jnp.einsum("gecf,efd->gecd", h, p["w_down"]),
+                  "expert_tiles").reshape(G, E * C, d)
+
+    # ---- combine ----
+    picked = jnp.take_along_axis(
+        y, jnp.minimum(slot, E * C - 1)[:, :, None], axis=1)
+    contrib = jnp.where(keep[:, :, None],
+                        picked * sorted_gate[:, :, None], 0.0).astype(x.dtype)
+    out = jax.vmap(lambda t, c: jnp.zeros((Tg, d), x.dtype).at[t].add(c))(
+        sorted_token, contrib)
+    out = constrain(out.reshape(T, d), "tokens_2d")
+
+    # ---- aux losses ----
+    me = jnp.mean(probs, axis=(0, 1))                            # [E]
+    one_hot_top1 = jax.nn.one_hot(expert_ids[..., 0], E, dtype=jnp.float32)
+    ce = jnp.mean(one_hot_top1, axis=(0, 1))
+    lb_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    frac_dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    aux = {"lb_loss": lb_loss, "z_loss": z_loss, "frac_dropped": frac_dropped}
+    return out, aux

@@ -1,0 +1,418 @@
+"""Recommendation models: FM, DCN-v2, DIEN, MIND + the embedding substrate.
+
+JAX has no native EmbeddingBag — per the assignment it is built here from
+``jnp.take`` + ``jax.ops.segment_sum``.  Sparse categorical fields use the
+hashing trick into per-field row ranges of one stacked table
+``[n_fields, rows, dim]`` so the whole embedding state is a single
+row-shardable array (rows over the 'model' axis → embedding parallelism;
+XLA SPMD turns the lookups into all-gather-free dynamic gathers + a
+reduce-scatter on the backward scatter-add).
+
+The paper's technique lands in ``retrieval``: the `retrieval_cand` shape
+scores one user query against 10⁶ candidate items — brute-force tiled
+matmul (`retrieval_scores_exact`, the roofline baseline) or a δ-EMQG graph
+index (`repro.core`), which benchmarks compare head-to-head.
+
+Models (all return (loss, metrics) from a batch dict):
+  FM      — 2-way factorization machine, O(nk) sum-square trick (Rendle'10)
+  DCN-v2  — cross network v2, 3 full-rank cross layers + deep tower
+  DIEN    — GRU interest extractor + AUGRU interest evolution (target attn)
+  MIND    — multi-interest B2I capsule routing (3 iters, 4 capsules)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, gru_init, gru_scan, mlp_apply, mlp_init
+
+
+# ---------------------------------------------------------------------------
+# Embedding substrate
+# ---------------------------------------------------------------------------
+
+def embedding_table_init(key, n_fields: int, rows: int, dim: int,
+                         dtype=jnp.float32) -> jax.Array:
+    """Stacked per-field table, stored FLAT [n_fields·rows, dim] so the row
+    axis is shardable over 'model' without reshaping a sharded dim."""
+    return (jax.random.normal(key, (n_fields * rows, dim), jnp.float32)
+            * 0.01).astype(dtype)
+
+
+def field_lookup_flat(table: jax.Array, ids: jax.Array, rows: int) -> jax.Array:
+    """table [F·rows, d], ids int32[B, F] (one id per field) → [B, F, d].
+    Per-field row ranges via offsets; the whole lookup is a single row
+    gather (one DMA stream, one scatter-add on the backward pass)."""
+    F = ids.shape[1]
+    offs = jnp.arange(F, dtype=ids.dtype) * rows
+    return jnp.take(table, jnp.clip(ids, 0, rows - 1) + offs[None, :], axis=0)
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array, mask: jax.Array,
+                  mode: str = "mean") -> jax.Array:
+    """EmbeddingBag: table [R, d], ids int32[B, L], mask bool[B, L] → [B, d].
+
+    take + masked segment-style reduction (the segment ids here are the
+    batch rows, so the reduction is a masked sum along L).
+    """
+    R = table.shape[0]
+    rows = jnp.take(table, jnp.clip(ids, 0, R - 1), axis=0)      # [B, L, d]
+    rows = jnp.where(mask[:, :, None], rows, 0.0)
+    s = jnp.sum(rows, axis=1)
+    if mode == "sum":
+        return s
+    return s / jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# FM
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FMConfig:
+    name: str = "fm"
+    n_sparse: int = 39
+    rows: int = 1 << 21
+    embed_dim: int = 10
+    dtype: Any = jnp.float32
+
+
+def fm_init(cfg: FMConfig, key) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "emb": embedding_table_init(k1, cfg.n_sparse, cfg.rows, cfg.embed_dim,
+                                    cfg.dtype),
+        "lin": embedding_table_init(k2, cfg.n_sparse, cfg.rows, 1, cfg.dtype),
+        "bias": jnp.zeros((), jnp.float32),
+    }
+
+
+def fm_forward(cfg: FMConfig, params: dict, sparse_ids: jax.Array) -> jax.Array:
+    """sparse_ids int32[B, F] → logit f32[B]."""
+    v = field_lookup_flat(params["emb"], sparse_ids, cfg.rows)          # [B, F, k]
+    w = field_lookup_flat(params["lin"], sparse_ids, cfg.rows)[..., 0]  # [B, F]
+    sum_v = jnp.sum(v, axis=1)                                # [B, k]
+    sum_v2 = jnp.sum(v * v, axis=1)
+    pair = 0.5 * jnp.sum(sum_v * sum_v - sum_v2, axis=-1)     # O(nk) trick
+    return (params["bias"] + jnp.sum(w, axis=1) + pair).astype(jnp.float32)
+
+
+def fm_loss(cfg: FMConfig, params: dict, batch: dict):
+    logit = fm_forward(cfg, params, batch["sparse_ids"])
+    return _bce(logit, batch["label"])
+
+
+# ---------------------------------------------------------------------------
+# DCN-v2
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DCNConfig:
+    name: str = "dcn-v2"
+    n_dense: int = 13
+    n_sparse: int = 26
+    rows: int = 1 << 21
+    embed_dim: int = 16
+    n_cross: int = 3
+    mlp_dims: tuple = (1024, 1024, 512)
+    dtype: Any = jnp.float32
+
+    @property
+    def d_input(self) -> int:
+        return self.n_dense + self.n_sparse * self.embed_dim
+
+
+def dcn_init(cfg: DCNConfig, key) -> dict:
+    ks = jax.random.split(key, 3 + cfg.n_cross)
+    d = cfg.d_input
+    p = {
+        "emb": embedding_table_init(ks[0], cfg.n_sparse, cfg.rows,
+                                    cfg.embed_dim, cfg.dtype),
+        "mlp": mlp_init(ks[1], [d, *cfg.mlp_dims], cfg.dtype),
+        "head": dense_init(ks[2], cfg.mlp_dims[-1], 1, cfg.dtype),
+    }
+    for i in range(cfg.n_cross):
+        p[f"cross_w{i}"] = dense_init(ks[3 + i], d, d, cfg.dtype)
+        p[f"cross_b{i}"] = jnp.zeros((d,), cfg.dtype)
+    return p
+
+
+def dcn_forward(cfg: DCNConfig, params: dict, dense: jax.Array,
+                sparse_ids: jax.Array) -> jax.Array:
+    """dense f32[B, 13], sparse_ids int32[B, 26] → logit f32[B]."""
+    emb = field_lookup_flat(params["emb"], sparse_ids, cfg.rows)   # [B, 26, 16]
+    x0 = jnp.concatenate([dense.astype(cfg.dtype),
+                          emb.reshape(emb.shape[0], -1)], axis=-1)
+    x = x0
+    for i in range(cfg.n_cross):                              # x_{l+1} = x0∘(Wx+b)+x
+        x = x0 * (x @ params[f"cross_w{i}"] + params[f"cross_b{i}"]) + x
+    h = mlp_apply(params["mlp"], x, len(cfg.mlp_dims), final_act=True)
+    return (h @ params["head"])[:, 0].astype(jnp.float32)
+
+
+def dcn_loss(cfg: DCNConfig, params: dict, batch: dict):
+    logit = dcn_forward(cfg, params, batch["dense"], batch["sparse_ids"])
+    return _bce(logit, batch["label"])
+
+
+# ---------------------------------------------------------------------------
+# DIEN
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DIENConfig:
+    name: str = "dien"
+    n_items: int = 1 << 22
+    n_cats: int = 1 << 12
+    embed_dim: int = 18
+    seq_len: int = 100
+    gru_dim: int = 108
+    mlp_dims: tuple = (200, 80)
+    dtype: Any = jnp.float32
+
+    @property
+    def d_beh(self) -> int:
+        return 2 * self.embed_dim      # item ⊕ category
+
+
+def dien_init(cfg: DIENConfig, key) -> dict:
+    ks = jax.random.split(key, 7)
+    d_beh, gd = cfg.d_beh, cfg.gru_dim
+    return {
+        "item_emb": embedding_table_init(ks[0], 1, cfg.n_items,
+                                         cfg.embed_dim, cfg.dtype),
+        "cat_emb": embedding_table_init(ks[1], 1, cfg.n_cats,
+                                        cfg.embed_dim, cfg.dtype),
+        "gru1": gru_init(ks[2], d_beh, gd, cfg.dtype),          # interest extractor
+        "gru2": gru_init(ks[3], gd, gd, cfg.dtype),             # interest evolution
+        "att_w": dense_init(ks[4], gd, d_beh, cfg.dtype),       # target attention
+        "mlp": mlp_init(ks[5], [gd + 2 * d_beh, *cfg.mlp_dims], cfg.dtype),
+        "head": dense_init(ks[6], cfg.mlp_dims[-1], 1, cfg.dtype),
+    }
+
+
+def _behavior_embed(cfg: DIENConfig, params: dict, item_ids, cat_ids):
+    e_i = jnp.take(params["item_emb"], jnp.clip(item_ids, 0, cfg.n_items - 1), axis=0)
+    e_c = jnp.take(params["cat_emb"], jnp.clip(cat_ids, 0, cfg.n_cats - 1), axis=0)
+    return jnp.concatenate([e_i, e_c], axis=-1)
+
+
+def dien_forward(cfg: DIENConfig, params: dict, batch: dict) -> jax.Array:
+    """batch: hist_items/hist_cats int32[B, T], hist_mask bool[B, T],
+    target_item/target_cat int32[B] → logit f32[B]."""
+    beh = _behavior_embed(cfg, params, batch["hist_items"], batch["hist_cats"])
+    tgt = _behavior_embed(cfg, params, batch["target_item"][:, None],
+                          batch["target_cat"][:, None])[:, 0]   # [B, d_beh]
+    mask = batch["hist_mask"]
+    beh = jnp.where(mask[:, :, None], beh, 0.0)
+
+    h_states, _ = gru_scan(params["gru1"], beh)                 # [B, T, gd]
+    # AUGRU: attention of each interest state against the target
+    scores = jnp.einsum("btg,gd,bd->bt", h_states, params["att_w"], tgt)
+    scores = jnp.where(mask, scores, -jnp.inf)
+    att = jax.nn.softmax(scores, axis=-1)
+    att = jnp.where(mask, att, 0.0)
+    _, h_final = gru_scan(params["gru2"], h_states, atts=att)   # [B, gd]
+
+    beh_sum = jnp.sum(beh, axis=1) / jnp.maximum(
+        jnp.sum(mask, axis=1, keepdims=True), 1.0)
+    feat = jnp.concatenate([h_final, tgt, beh_sum], axis=-1)
+    h = mlp_apply(params["mlp"], feat, len(cfg.mlp_dims), final_act=True)
+    return (h @ params["head"])[:, 0].astype(jnp.float32)
+
+
+def dien_loss(cfg: DIENConfig, params: dict, batch: dict):
+    return _bce(dien_forward(cfg, params, batch), batch["label"])
+
+
+# ---------------------------------------------------------------------------
+# MIND
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MINDConfig:
+    name: str = "mind"
+    n_items: int = 1 << 22
+    embed_dim: int = 64
+    n_interests: int = 4
+    routing_iters: int = 3
+    seq_len: int = 50
+    n_neg: int = 16
+    pow_p: float = 2.0                 # label-aware attention sharpness
+    dtype: Any = jnp.float32
+
+
+def mind_init(cfg: MINDConfig, key) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.embed_dim
+    return {
+        "item_emb": embedding_table_init(k1, 1, cfg.n_items, d, cfg.dtype),
+        "s_bilinear": dense_init(k2, d, d, cfg.dtype),           # shared B2I map
+        "b_init": (jax.random.normal(k3, (cfg.n_interests,), jnp.float32)
+                   * 0.1).astype(cfg.dtype),
+    }
+
+
+def _squash(x: jax.Array) -> jax.Array:
+    n2 = jnp.sum(x * x, axis=-1, keepdims=True)
+    return (n2 / (1.0 + n2)) * x / jnp.sqrt(n2 + 1e-9)
+
+
+def mind_user_interests(cfg: MINDConfig, params: dict, hist_items: jax.Array,
+                        hist_mask: jax.Array) -> jax.Array:
+    """B2I dynamic routing: hist [B, T] → interest capsules [B, K, d]."""
+    e = jnp.take(params["item_emb"], jnp.clip(hist_items, 0, cfg.n_items - 1),
+                 axis=0)                                          # [B, T, d]
+    low = jnp.einsum("btd,de->bte", e, params["s_bilinear"])      # S·e_i
+    low = jnp.where(hist_mask[:, :, None], low, 0.0)
+    B, T, d = low.shape
+    K = cfg.n_interests
+    b_logits = jnp.broadcast_to(params["b_init"][None, None, :],
+                                (B, T, K)).astype(jnp.float32)
+
+    caps = jnp.zeros((B, K, d), low.dtype)
+    for _ in range(cfg.routing_iters):
+        c = jax.nn.softmax(b_logits, axis=-1)                    # over capsules
+        c = jnp.where(hist_mask[:, :, None], c, 0.0)
+        caps = _squash(jnp.einsum("btk,btd->bkd", c, low))
+        b_logits = b_logits + jnp.einsum("bkd,btd->btk", caps, low)
+    return caps
+
+
+def mind_loss(cfg: MINDConfig, params: dict, batch: dict):
+    """Sampled-softmax training with label-aware attention (paper §4.3).
+    batch: hist_items [B,T], hist_mask [B,T], target_item [B],
+    neg_items [B, n_neg]."""
+    caps = mind_user_interests(cfg, params, batch["hist_items"],
+                               batch["hist_mask"])                # [B, K, d]
+    tgt = jnp.take(params["item_emb"],
+                   jnp.clip(batch["target_item"], 0, cfg.n_items - 1), axis=0)
+    # label-aware attention: user vector = Σ softmax((v·e)^p) v
+    att = jnp.einsum("bkd,bd->bk", caps, tgt)
+    att = jax.nn.softmax(jnp.power(jnp.abs(att), cfg.pow_p)
+                         * jnp.sign(att), axis=-1)
+    user = jnp.einsum("bk,bkd->bd", att, caps)                    # [B, d]
+    neg = jnp.take(params["item_emb"],
+                   jnp.clip(batch["neg_items"], 0, cfg.n_items - 1), axis=0)
+    pos_logit = jnp.einsum("bd,bd->b", user, tgt)
+    neg_logit = jnp.einsum("bd,bnd->bn", user, neg)
+    logits = jnp.concatenate([pos_logit[:, None], neg_logit], axis=1)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    loss = -jnp.mean(logp[:, 0])
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == 0).astype(jnp.float32))
+    return loss, {"acc": acc}
+
+
+def mind_serve_scores(cfg: MINDConfig, params: dict, hist_items, hist_mask,
+                      cand_items: jax.Array) -> jax.Array:
+    """Serving: max-over-interests score against candidates [B, C] → [B, C]."""
+    caps = mind_user_interests(cfg, params, hist_items, hist_mask)
+    cand = jnp.take(params["item_emb"], jnp.clip(cand_items, 0, cfg.n_items - 1),
+                    axis=0)                                       # [B, C, d]
+    scores = jnp.einsum("bkd,bcd->bkc", caps, cand)
+    return jnp.max(scores, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Retrieval scoring — the δ-EMG integration point
+# ---------------------------------------------------------------------------
+
+def retrieval_scores_exact(query: jax.Array, item_table: jax.Array,
+                           k: int = 100) -> tuple[jax.Array, jax.Array]:
+    """Brute-force candidate scoring: query [B, d] (or [B, K, d] multi-
+    interest) against item_table [C, d]; returns top-k (scores, ids).
+    This is the roofline-measurable dense path; the δ-EMQG path lives in
+    repro.core (see benchmarks/retrieval.py for the comparison)."""
+    if query.ndim == 3:
+        s = jnp.einsum("bkd,cd->bkc", query, item_table)
+        s = jnp.max(s, axis=1)
+    else:
+        s = jnp.einsum("bd,cd->bc", query, item_table)
+    return jax.lax.top_k(s, k)
+
+
+def fm_retrieval(cfg: FMConfig, params: dict, user_ids: jax.Array,
+                 cand_ids: jax.Array, k: int = 100):
+    """FM as a retrieval scorer: query = Σ user-field latent vectors; the
+    candidate item lives in field 0.  score(q, i) = ⟨q, v_i⟩ + w_i.
+    user_ids int32[B, F−1] (fields 1..F−1), cand_ids int32[C]."""
+    F, R = cfg.n_sparse, cfg.rows
+    flat = params["emb"]
+    offs = jnp.arange(1, F, dtype=user_ids.dtype) * R
+    uv = jnp.take(flat, jnp.clip(user_ids, 0, R - 1) + offs[None, :], axis=0)
+    q = jnp.sum(uv, axis=1)                                   # [B, k]
+    iv = jnp.take(flat, jnp.clip(cand_ids, 0, R - 1), axis=0)  # field-0 rows
+    iw = jnp.take(params["lin"], jnp.clip(cand_ids, 0, R - 1), axis=0)[:, 0]
+    scores = q @ iv.T + iw[None, :]
+    return jax.lax.top_k(scores.astype(jnp.float32), k)
+
+
+def dcn_retrieval(cfg: DCNConfig, params: dict, dense: jax.Array,
+                  user_sparse: jax.Array, cand_ids: jax.Array, k: int = 100):
+    """Full-model offline scoring of C candidates for one user context:
+    user features broadcast across candidates, candidate id fills sparse
+    field 0.  dense [1, 13], user_sparse [1, 25], cand_ids [C]."""
+    C = cand_ids.shape[0]
+    sparse = jnp.concatenate(
+        [cand_ids[:, None],
+         jnp.broadcast_to(user_sparse, (C, cfg.n_sparse - 1))], axis=1)
+    logit = dcn_forward(cfg, params, jnp.broadcast_to(dense, (C, cfg.n_dense)),
+                        sparse)
+    score, idx = jax.lax.top_k(logit, k)
+    return score[None], jnp.take(cand_ids, idx)[None]
+
+
+def dien_retrieval(cfg: DIENConfig, params: dict, batch: dict,
+                   cand_ids: jax.Array, k: int = 100):
+    """DIEN candidate scoring: GRU1 interest extraction runs once per user;
+    the target-conditioned attention + AUGRU + MLP head run per candidate
+    (candidates as the batch axis — shardable over the whole mesh)."""
+    C = cand_ids.shape[0]
+    beh = _behavior_embed(cfg, params, batch["hist_items"], batch["hist_cats"])
+    mask = batch["hist_mask"]                                   # [1, T]
+    beh = jnp.where(mask[:, :, None], beh, 0.0)
+    h_states, _ = gru_scan(params["gru1"], beh)                 # [1, T, g]
+
+    tgt = _behavior_embed(cfg, params, cand_ids[:, None],
+                          (cand_ids % cfg.n_cats)[:, None])[:, 0]  # [C, d_beh]
+    h_rep = jnp.broadcast_to(h_states, (C,) + h_states.shape[1:])
+    m_rep = jnp.broadcast_to(mask, (C, mask.shape[1]))
+    scores = jnp.einsum("ctg,gd,cd->ct", h_rep, params["att_w"], tgt)
+    scores = jnp.where(m_rep, scores, -jnp.inf)
+    att = jax.nn.softmax(scores, axis=-1)
+    att = jnp.where(m_rep, att, 0.0)
+    _, h_final = gru_scan(params["gru2"], h_rep, atts=att)      # [C, g]
+    beh_sum = jnp.sum(beh, axis=1) / jnp.maximum(
+        jnp.sum(mask, axis=1, keepdims=True), 1.0)
+    feat = jnp.concatenate(
+        [h_final, tgt, jnp.broadcast_to(beh_sum, (C, beh_sum.shape[1]))], axis=-1)
+    h = mlp_apply(params["mlp"], feat, len(cfg.mlp_dims), final_act=True)
+    logit = (h @ params["head"])[:, 0].astype(jnp.float32)
+    score, idx = jax.lax.top_k(logit, k)
+    return score[None], jnp.take(cand_ids, idx)[None]
+
+
+def mind_retrieval(cfg: MINDConfig, params: dict, hist_items, hist_mask,
+                   cand_ids: jax.Array, k: int = 100):
+    """MIND retrieval: max-over-interest dot scores against the candidate
+    table — the cell the δ-EMQG index replaces with graph search (see
+    benchmarks/retrieval.py for exact-vs-index comparison)."""
+    caps = mind_user_interests(cfg, params, hist_items, hist_mask)  # [B,K,d]
+    cand = jnp.take(params["item_emb"], jnp.clip(cand_ids, 0, cfg.n_items - 1),
+                    axis=0)                                         # [C, d]
+    scores = jnp.einsum("bkd,cd->bkc", caps, cand)
+    scores = jnp.max(scores, axis=1).astype(jnp.float32)            # [B, C]
+    score, idx = jax.lax.top_k(scores, k)
+    return score, jnp.take(cand_ids, idx)
+
+
+def _bce(logit: jax.Array, label: jax.Array):
+    label = label.astype(jnp.float32)
+    loss = jnp.mean(jnp.maximum(logit, 0) - logit * label
+                    + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+    acc = jnp.mean(((logit > 0) == (label > 0.5)).astype(jnp.float32))
+    return loss, {"acc": acc}

@@ -1,0 +1,422 @@
+"""Decoder-only transformer LM — dense and MoE variants, scan-over-layers.
+
+Covers all five assigned LM architectures through one config dataclass:
+RMSNorm · RoPE · GQA · SwiGLU · optional MoE (top-k, shared experts,
+periodic MoE placement) · optional sliding-window attention per layer
+(llama4-style iRoPE hybrid: window layers + periodic full/global layers).
+
+Layer parameters are stacked [L, ...] so the forward pass is a single
+``lax.scan`` — this keeps HLO size O(1) in depth (essential for compiling
+48-layer dry-runs) and gives the remat policy one clean boundary.
+
+Entry points (all pure functions over a params pytree):
+  init(cfg, key)                            → params
+  forward(cfg, params, tokens)              → logits         (training)
+  prefill(cfg, params, tokens)              → logits, kv-cache
+  decode_step(cfg, params, cache, tok, pos) → logits, cache  (serving)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import (
+    apply_rope,
+    decode_attention,
+    dense_init,
+    flash_attention,
+    rms_norm,
+    swiglu,
+)
+from .hints import constrain
+from .moe import moe_apply, moe_init
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str = "lm"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_ff: int = 512                  # dense FFN width / per-expert width
+    vocab: int = 1024
+    head_dim: Optional[int] = None   # default d_model // n_heads
+    rope_theta: float = 10000.0
+    # MoE
+    n_experts: int = 0               # 0 → dense model
+    top_k: int = 1
+    n_shared_experts: int = 0        # DeepSeek/Moonlight-style shared experts
+    moe_period: int = 1              # every p-th layer is MoE (llama4: 2)
+    first_dense: int = 0             # leading dense layers (moonlight: 1)
+    capacity_factor: float = 1.25
+    # attention pattern
+    window: Optional[int] = None     # sliding-window size for window layers
+    window_period: int = 0           # 0 → all layers full attention;
+                                     # p → layers with (i % p != p-1) use window
+    dispatch_groups: int = 1         # MoE dispatch groups (launchers: dp size)
+    dtype: Any = jnp.bfloat16
+    # loss weights
+    lb_coef: float = 0.01
+    z_coef: float = 1e-3
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def n_scan_layers(self) -> int:
+        return self.n_layers - self.first_dense
+
+    def param_count(self) -> int:
+        d, hd, H, KV = self.d_model, self.hd, self.n_heads, self.n_kv_heads
+        attn = d * (H + 2 * KV) * hd + H * hd * d + 2 * d
+        dense_ffn = 3 * d * self.d_ff
+        moe_ffn = (self.n_experts * 3 * d * self.d_ff
+                   + self.n_shared_experts * 3 * d * self.d_ff
+                   + d * self.n_experts)
+        n_moe = 0
+        if self.is_moe:
+            n_moe = sum(1 for i in range(self.first_dense, self.n_layers)
+                        if (i - self.first_dense) % self.moe_period == self.moe_period - 1)
+        n_dense = self.n_layers - n_moe
+        return (self.n_layers * attn + n_dense * dense_ffn + n_moe * moe_ffn
+                + 2 * self.vocab * d + d)
+
+    def active_param_count(self) -> int:
+        if not self.is_moe:
+            return self.param_count()
+        d = self.d_model
+        full = self.param_count()
+        moe_total = self.n_experts * 3 * d * self.d_ff
+        moe_active = (self.top_k + self.n_shared_experts) * 3 * d * self.d_ff
+        n_moe = sum(1 for i in range(self.first_dense, self.n_layers)
+                    if (i - self.first_dense) % self.moe_period == self.moe_period - 1)
+        return full - n_moe * (moe_total - moe_active)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _layer_init(cfg: LMConfig, key, moe_layer: bool) -> dict:
+    d, hd, H, KV = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 8)
+    p = {
+        "ln1": jnp.ones((d,), jnp.float32),
+        "wq": dense_init(ks[0], d, H * hd, cfg.dtype),
+        "wk": dense_init(ks[1], d, KV * hd, cfg.dtype),
+        "wv": dense_init(ks[2], d, KV * hd, cfg.dtype),
+        "wo": dense_init(ks[3], H * hd, d, cfg.dtype),
+        "ln2": jnp.ones((d,), jnp.float32),
+    }
+    if moe_layer:
+        p["moe"] = moe_init(ks[4], d, cfg.d_ff, cfg.n_experts, cfg.dtype)
+        if cfg.n_shared_experts:
+            ff_sh = cfg.n_shared_experts * cfg.d_ff
+            p["shared"] = {
+                "w_gate": dense_init(ks[5], d, ff_sh, cfg.dtype),
+                "w_up": dense_init(ks[6], d, ff_sh, cfg.dtype),
+                "w_down": dense_init(ks[7], ff_sh, d, cfg.dtype),
+            }
+    else:
+        p["ffn"] = {
+            "w_gate": dense_init(ks[5], d, cfg.d_ff, cfg.dtype),
+            "w_up": dense_init(ks[6], d, cfg.d_ff, cfg.dtype),
+            "w_down": dense_init(ks[7], cfg.d_ff, d, cfg.dtype),
+        }
+    return p
+
+
+def _is_moe_layer(cfg: LMConfig, i: int) -> bool:
+    if not cfg.is_moe or i < cfg.first_dense:
+        return False
+    return (i - cfg.first_dense) % cfg.moe_period == cfg.moe_period - 1
+
+
+def init(cfg: LMConfig, key) -> dict:
+    """Stacked params.  Scan block covers layers [first_dense, n_layers); if
+    the MoE placement is periodic the scan body processes ``moe_period``
+    layers (period−1 dense + 1 MoE) so the stack stays uniform."""
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    params: dict = {
+        "embed": dense_init(keys[0], cfg.vocab, cfg.d_model, cfg.dtype, scale=0.02),
+        "unembed": dense_init(keys[1], cfg.d_model, cfg.vocab, cfg.dtype),
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    # leading dense layers (unrolled)
+    params["head_layers"] = [
+        _layer_init(cfg, keys[2 + i], moe_layer=False)
+        for i in range(cfg.first_dense)
+    ]
+    # scanned stack
+    n_scan = cfg.n_scan_layers
+    if cfg.is_moe:
+        period = cfg.moe_period
+        assert n_scan % period == 0, (
+            f"{cfg.name}: scan layers {n_scan} not divisible by moe_period {period}")
+        n_super = n_scan // period
+        sub = []
+        for j in range(period):
+            moe_layer = (j == period - 1)
+            stack = [
+                _layer_init(cfg, keys[2 + cfg.first_dense + s * period + j], moe_layer)
+                for s in range(n_super)
+            ]
+            sub.append(jax.tree.map(lambda *xs: jnp.stack(xs), *stack))
+        params["scan"] = sub            # list of length `period`
+    else:
+        stack = [
+            _layer_init(cfg, keys[2 + cfg.first_dense + s], moe_layer=False)
+            for s in range(n_scan)
+        ]
+        params["scan"] = [jax.tree.map(lambda *xs: jnp.stack(xs), *stack)]
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _attn(cfg: LMConfig, p: dict, x: jax.Array, positions: jax.Array,
+          layer_window: Optional[int]) -> jax.Array:
+    B, S, d = x.shape
+    h = rms_norm(x, p["ln1"])
+    q = constrain((h @ p["wq"]).reshape(B, S, cfg.n_heads, cfg.hd), "act_heads")
+    k = constrain((h @ p["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.hd), "act_kv")
+    v = constrain((h @ p["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.hd), "act_kv")
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = flash_attention(q, k, v, causal=True, window=layer_window)
+    return x + constrain(
+        o.reshape(B, S, cfg.n_heads * cfg.hd) @ p["wo"], "act_3d")
+
+
+def _ffn_dense(p: dict, x: jax.Array) -> jax.Array:
+    h = rms_norm(x, p["ln2"])
+    g = constrain(jnp.einsum("...d,df->...f", h, p["ffn"]["w_gate"]), "act_ff")
+    u = constrain(jnp.einsum("...d,df->...f", h, p["ffn"]["w_up"]), "act_ff")
+    out = jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, p["ffn"]["w_down"])
+    return x + constrain(out, "act_3d")
+
+
+def _ffn_moe(cfg: LMConfig, p: dict, x: jax.Array) -> tuple[jax.Array, dict]:
+    B, S, d = x.shape
+    h = rms_norm(x, p["ln2"])
+    flat = h.reshape(B * S, d)
+    out, aux = moe_apply(p["moe"], flat, cfg.top_k, cfg.capacity_factor,
+                         n_groups=cfg.dispatch_groups)
+    out = out.reshape(B, S, d)
+    if cfg.n_shared_experts:
+        sh = p["shared"]
+        out = out + swiglu(h, sh["w_gate"], sh["w_up"], sh["w_down"])
+    return x + out, aux
+
+
+def _layer_window(cfg: LMConfig, layer_idx: int) -> Optional[int]:
+    if cfg.window is None or cfg.window_period == 0:
+        return None
+    if layer_idx % cfg.window_period == cfg.window_period - 1:
+        return None        # periodic global layer
+    return cfg.window
+
+
+def forward(cfg: LMConfig, params: dict, tokens: jax.Array,
+            remat: bool = True) -> tuple[jax.Array, dict]:
+    """tokens int32[B, S] → (logits f32[B, S, V], aux)."""
+    B, S = tokens.shape
+    x = constrain(jnp.take(params["embed"], tokens, axis=0), "act_3d")
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    aux_acc = {"lb_loss": jnp.float32(0), "z_loss": jnp.float32(0),
+               "frac_dropped": jnp.float32(0)}
+
+    for i, p in enumerate(params["head_layers"]):
+        x = _attn(cfg, p, x, positions, _layer_window(cfg, i))
+        x = _ffn_dense(p, x)
+
+    period = cfg.moe_period if cfg.is_moe else 1
+    n_super = cfg.n_scan_layers // period
+
+    def super_layer(carry, layer_params):
+        x, aux = carry
+        x = constrain(x, "act_3d")
+        for j, p in enumerate(layer_params):
+            # window pattern is uniform across the scan (same offset per
+            # sub-layer position) — matches llama4's fixed interleave
+            w = cfg.window if (cfg.window is not None and cfg.window_period
+                               and j % cfg.window_period != cfg.window_period - 1) else None
+            x = _attn(cfg, p, x, positions, w)
+            if cfg.is_moe and j == period - 1:
+                x, a = _ffn_moe(cfg, p, x)
+                aux = {k: aux[k] + a[k] for k in aux}
+            else:
+                x = _ffn_dense(p, x)
+        return (x, aux), None
+
+    body = super_layer
+    if remat:
+        body = jax.checkpoint(super_layer, prevent_cse=False)
+
+    (x, aux_acc), _ = jax.lax.scan(
+        lambda c, ps: body(c, ps), (x, aux_acc), tuple(params["scan"]),
+        length=n_super)
+
+    x = rms_norm(x, params["ln_f"])
+    logits = constrain((x @ params["unembed"]).astype(jnp.float32), "logits")
+    n_moe = max(sum(1 for i in range(cfg.n_layers) if _is_moe_layer(cfg, i)), 1)
+    aux = {k: v / n_moe for k, v in aux_acc.items()}
+    return logits, aux
+
+
+def loss_fn(cfg: LMConfig, params: dict, tokens: jax.Array,
+            targets: jax.Array) -> tuple[jax.Array, dict]:
+    logits, aux = forward(cfg, params, tokens)
+    # Vocab-parallel-safe cross entropy: no gather along V (a
+    # take_along_axis over a 'model'-sharded vocab axis would force XLA to
+    # all-gather the full [B,S,V] logits — the one-hot contraction and the
+    # logsumexp both partition cleanly instead).
+    lse = jax.nn.logsumexp(logits, axis=-1)                       # [B, S]
+    one_hot = (jnp.arange(cfg.vocab, dtype=targets.dtype)[None, None, :]
+               == targets[..., None])
+    tgt_logit = jnp.sum(jnp.where(one_hot, logits, 0.0), axis=-1)
+    nll = lse - tgt_logit
+    loss = jnp.mean(nll)
+    if cfg.is_moe:
+        loss = loss + cfg.lb_coef * aux["lb_loss"] + cfg.z_coef * aux["z_loss"]
+    return loss, {"nll": jnp.mean(nll), **aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int, dtype=None) -> dict:
+    """KV cache pytree: one [L, B, S, KV, hd] pair per scan sub-stack plus
+    per-head-layer caches."""
+    dtype = dtype or cfg.dtype
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    period = cfg.moe_period if cfg.is_moe else 1
+    n_super = cfg.n_scan_layers // period
+
+    def kv(n):
+        return {
+            "k": jnp.zeros((n, batch, max_seq, KV, hd), dtype),
+            "v": jnp.zeros((n, batch, max_seq, KV, hd), dtype),
+        }
+
+    return {
+        "head": [kv(1) for _ in range(cfg.first_dense)],
+        "scan": [kv(n_super) for _ in range(period)],
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _attn_decode(cfg: LMConfig, p: dict, x: jax.Array, k_cache, v_cache,
+                 pos: jax.Array, window: Optional[int]):
+    """x [B, 1, d]; returns (out [B, 1, d], new_k_entry, new_v_entry)."""
+    B = x.shape[0]
+    k_cache = constrain(k_cache, "cache_kv")
+    v_cache = constrain(v_cache, "cache_kv")
+    h = rms_norm(x[:, 0, :], p["ln1"])
+    q = (h @ p["wq"]).reshape(B, cfg.n_heads, cfg.hd)
+    k = (h @ p["wk"]).reshape(B, cfg.n_kv_heads, cfg.hd)
+    v = (h @ p["wv"]).reshape(B, cfg.n_kv_heads, cfg.hd)
+    # q is tiny (one token); replicating it over 'model' lets the score
+    # einsum contract against the hd-sharded cache *locally* (partial sums
+    # + a 50 MB psum of scores) — leaving q head-sharded makes XLA
+    # all-gather the multi-GB cache to reshard hd→heads every layer.
+    q = constrain(apply_rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0],
+                  "decode_q")
+    k = apply_rope(k[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+    # write new kv at pos
+    k_cache = constrain(jax.vmap(
+        lambda c, kk, pp: jax.lax.dynamic_update_slice_in_dim(
+            c, kk[None], pp, axis=0))(k_cache, k, pos), "cache_kv")
+    v_cache = constrain(jax.vmap(
+        lambda c, vv, pp: jax.lax.dynamic_update_slice_in_dim(
+            c, vv[None], pp, axis=0))(v_cache, v, pos), "cache_kv")
+    o = decode_attention(q, k_cache, v_cache, pos + 1, window=window)
+    out = x + (o.reshape(B, cfg.n_heads * cfg.hd) @ p["wo"])[:, None, :]
+    return out, k_cache, v_cache
+
+
+def decode_step(cfg: LMConfig, params: dict, cache: dict,
+                tokens: jax.Array) -> tuple[jax.Array, dict]:
+    """One serving step: tokens int32[B] (current token) → next-token logits
+    [B, V]; cache advanced functionally.
+
+    The stacked KV cache rides in the scan *carry* and is updated with
+    dynamic_update_index — XLA's while-loop buffer aliasing then keeps the
+    multi-GB cache in place.  (Routing the per-layer cache through scan ys
+    materializes a second full cache: +12 GiB/device on the 16B-MoE
+    decode_32k cell.)"""
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    x = constrain(jnp.take(params["embed"], tokens, axis=0)[:, None, :],
+                  "act_3d")   # [B, 1, d]
+
+    new_head = []
+    for i, p in enumerate(params["head_layers"]):
+        c = cache["head"][i]
+        x, kc, vc = _attn_decode(cfg, p, x, c["k"][0], c["v"][0], pos,
+                                 _layer_window(cfg, i))
+        new_head.append({"k": kc[None], "v": vc[None]})
+        x = _ffn_dense(p, x)
+
+    period = cfg.moe_period if cfg.is_moe else 1
+    n_super = cfg.n_scan_layers // period
+
+    def super_layer(carry, inp):
+        x, caches = carry
+        i, layer_params = inp
+        new_caches = []
+        for j in range(period):
+            p = layer_params[j]
+            ck = jax.lax.dynamic_index_in_dim(caches[j]["k"], i, axis=0,
+                                              keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(caches[j]["v"], i, axis=0,
+                                              keepdims=False)
+            w = cfg.window if (cfg.window is not None and cfg.window_period
+                               and j % cfg.window_period != cfg.window_period - 1) else None
+            x, kc, vc = _attn_decode(cfg, p, x, ck, cv, pos, w)
+            new_caches.append({
+                "k": jax.lax.dynamic_update_index_in_dim(
+                    caches[j]["k"], kc, i, axis=0),
+                "v": jax.lax.dynamic_update_index_in_dim(
+                    caches[j]["v"], vc, i, axis=0),
+            })
+            if cfg.is_moe and j == period - 1:
+                x, _ = _ffn_moe(cfg, p, x)
+            else:
+                x = _ffn_dense(p, x)
+        return (x, tuple(new_caches)), None
+
+    (x, new_scan), _ = jax.lax.scan(
+        super_layer, (x, tuple(cache["scan"])),
+        (jnp.arange(n_super), tuple(params["scan"])), length=n_super)
+
+    x = rms_norm(x[:, 0, :], params["ln_f"])
+    logits = (x @ params["unembed"]).astype(jnp.float32)
+    new_cache = {
+        "head": new_head,
+        "scan": list(new_scan),
+        "pos": pos + 1,
+    }
+    return logits, new_cache
+
+
+def prefill(cfg: LMConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    """Prefill = full forward over the prompt; returns last-position logits.
+    (Cache materialization for subsequent decode is exercised separately by
+    decode_step; the prefill dry-run measures the compute-bound pass.)"""
+    logits, _ = forward(cfg, params, tokens)
+    return logits[:, -1, :]

@@ -1,0 +1,106 @@
+"""Batched ANN request serving on a δ-EMG / δ-EMQG index.
+
+Request-level batching is how a lock-step accelerator search serves an
+online stream: requests accumulate until ``max_batch`` or ``max_wait_s``
+elapses, the batch is padded to a fixed bucket size (one trace per bucket),
+and per-request results are fanned back out.  Straggler mitigation falls out
+of the lock-step formulation — a hard query costs masked iterations instead
+of blocking a core.
+
+Single-process implementation (threads would add nothing in a test
+container); the ``submit_many`` / ``drain`` pair models the arrival loop so
+benchmarks can replay request traces with arrival timestamps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    EMQGIndex,
+    GraphIndex,
+    SearchParams,
+    probing_search,
+    search,
+)
+
+
+@dataclasses.dataclass
+class ServeStats:
+    n_requests: int = 0
+    n_batches: int = 0
+    total_latency_s: float = 0.0
+    max_latency_s: float = 0.0
+    total_search_s: float = 0.0
+
+    @property
+    def mean_latency_s(self) -> float:
+        return self.total_latency_s / max(self.n_requests, 1)
+
+    @property
+    def qps(self) -> float:
+        return self.n_requests / max(self.total_search_s, 1e-9)
+
+
+class AnnServer:
+    def __init__(self, index: GraphIndex | EMQGIndex, params: SearchParams,
+                 max_batch: int = 64, buckets: tuple[int, ...] = (8, 32, 64)):
+        self.index = index
+        self.params = params
+        self.max_batch = max_batch
+        self.buckets = tuple(sorted(set(b for b in buckets if b <= max_batch))) \
+            or (max_batch,)
+        self.quantized = isinstance(index, EMQGIndex)
+        self._queue: list[tuple[float, np.ndarray]] = []
+        self.stats = ServeStats()
+
+    # -- request path -------------------------------------------------------
+    def submit(self, query: np.ndarray, arrival_t: Optional[float] = None):
+        self._queue.append((arrival_t if arrival_t is not None else time.time(),
+                            np.asarray(query, np.float32)))
+
+    def submit_many(self, queries: np.ndarray, arrival_ts=None):
+        for i, q in enumerate(queries):
+            self.submit(q, None if arrival_ts is None else float(arrival_ts[i]))
+
+    def _bucket(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.buckets[-1]
+
+    def drain(self) -> list[tuple[np.ndarray, np.ndarray]]:
+        """Serve everything queued; returns [(ids, dists)] per request in
+        submission order."""
+        out = []
+        while self._queue:
+            take = self._queue[: self.max_batch]
+            self._queue = self._queue[self.max_batch:]
+            ts = np.array([t for t, _ in take])
+            qs = np.stack([q for _, q in take])
+            bucket = self._bucket(len(take))
+            pad = bucket - len(take)
+            if pad:
+                qs = np.concatenate([qs, np.repeat(qs[-1:], pad, axis=0)])
+            t0 = time.time()
+            if self.quantized:
+                res = probing_search(self.index, jnp.asarray(qs), self.params)
+            else:
+                res = search(self.index, jnp.asarray(qs), self.params)
+            ids = np.asarray(res.ids)
+            dists = np.asarray(res.dists)
+            t1 = time.time()
+            for i in range(len(take)):
+                out.append((ids[i], dists[i]))
+                lat = t1 - ts[i]
+                self.stats.n_requests += 1
+                self.stats.total_latency_s += lat
+                self.stats.max_latency_s = max(self.stats.max_latency_s, lat)
+            self.stats.n_batches += 1
+            self.stats.total_search_s += t1 - t0
+        return out

@@ -1,0 +1,93 @@
+"""Train-step factory: loss → grad → clip → AdamW, with optional microbatch
+gradient accumulation (scan) and donation-friendly packing.
+
+The returned step is a pure function
+    step(state: TrainState, batch) → (state, metrics)
+suitable for ``jax.jit(..., in_shardings=..., donate_argnums=0)`` — the
+launchers in ``repro.launch`` attach the mesh/shardings; nothing here is
+mesh-aware, which is what keeps the same step usable for smoke tests
+(1 CPU device) and the 512-chip dry-run.
+
+Gradient communication notes (DESIGN.md §6): with bf16 params the backward
+all-reduces run in bf16 already (2× wire compression vs f32); microbatch
+accumulation holds an f32 accumulator so precision is recovered at the
+accumulation boundary.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import OptConfig, adamw_init, adamw_update
+from repro.core.types import _register, static_field
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+    @staticmethod
+    def create(params, opt_cfg: OptConfig) -> "TrainState":
+        return TrainState(params=params, opt_state=adamw_init(params, opt_cfg),
+                          step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(
+    loss_fn: Callable,            # loss_fn(params, batch) → (loss, metrics)
+    opt_cfg: OptConfig,
+    accum_steps: int = 1,
+    accum_dtype=None,
+) -> Callable:
+    """Build the jit-able train step.  With accum_steps > 1 the batch's
+    leading axis must be [accum_steps, micro_batch, ...]; gradients are
+    accumulated across a lax.scan before one optimizer update.
+
+    ``accum_dtype`` controls the accumulator precision: f32 (default) is
+    exact; param-dtype (bf16) halves the accumulator footprint — at 400B
+    params that is 3.1 GiB/device of HBM (the wire all-reduces are bf16
+    either way; stochastic-rounding-free bf16 accumulation over ≤16
+    microbatches loses <0.5 ulp in practice)."""
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        return loss, metrics, grads
+
+    def step(state: TrainState, batch):
+        if accum_steps == 1:
+            loss, metrics, grads = grads_of(state.params, batch)
+        else:
+            adt = accum_dtype or jnp.float32
+
+            def micro(acc, mb):
+                loss_a, g_acc = acc
+                loss, metrics, grads = grads_of(state.params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(a.dtype) / accum_steps,
+                    g_acc, grads)
+                return (loss_a + loss / accum_steps, g_acc), metrics
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, adt if p.dtype == jnp.bfloat16
+                                    else jnp.float32), state.params)
+            (loss, grads), metrics_all = jax.lax.scan(
+                micro, (jnp.float32(0), g0), batch)
+            metrics = jax.tree.map(lambda m: m[-1], metrics_all)
+            grads = jax.tree.map(
+                lambda g, p: g.astype(p.dtype), grads, state.params)
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state.opt_state, state.params, opt_cfg)
+        new_state = TrainState(params=new_params, opt_state=new_opt,
+                               step=state.step + 1)
+        return new_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return step

@@ -1,0 +1,32 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see the real
+single-CPU device; multi-device tests spawn subprocesses that set
+--xla_force_host_platform_device_count themselves."""
+
+import numpy as np
+import pytest
+
+
+def gmm(n, d, k_clusters, seed, scale=0.35):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(k_clusters, d))
+    asg = rng.integers(0, k_clusters, n)
+    return (centers[asg] + scale * rng.normal(size=(n, d))).astype(np.float32)
+
+
+@pytest.fixture(scope="session")
+def small_corpus():
+    """Clustered corpus + queries + brute-force ground truth (k=10)."""
+    from repro.core.distances import brute_force_knn
+
+    base = gmm(1200, 24, 24, seed=0)
+    queries = gmm(64, 24, 24, seed=1)
+    gt_d, gt_i = brute_force_knn(queries, base, 10)
+    return {"base": base, "queries": queries, "gt_d": gt_d, "gt_i": gt_i}
+
+
+def recall_at_k(ids, gt_i, k):
+    ids = np.asarray(ids)[:, :k]
+    return float(np.mean([
+        len(set(ids[i].tolist()) & set(gt_i[i, :k].tolist())) / k
+        for i in range(ids.shape[0])
+    ]))

@@ -1,0 +1,138 @@
+"""Multi-device tests (sharded index search, merge exactness, dry-run cell).
+
+These spawn subprocesses because --xla_force_host_platform_device_count must
+be set before jax initializes, and the main pytest process must keep seeing
+a single device for the smoke tests."""
+
+import subprocess
+import sys
+
+import pytest
+
+_PREAMBLE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n}"
+import sys; sys.path.insert(0, "src")
+import numpy as np, jax, jax.numpy as jnp
+"""
+
+
+def _run(body: str, n_devices: int = 8, timeout: int = 560) -> str:
+    code = _PREAMBLE.format(n=n_devices) + body
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=timeout, cwd="/root/repo")
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr[-3000:]}"
+    return proc.stdout
+
+
+def test_sharded_search_matches_brute_force():
+    out = _run("""
+from repro.core import BuildParams, SearchParams
+from repro.core.distributed import build_sharded, make_sharded_search
+from repro.core.distances import brute_force_knn
+rng = np.random.default_rng(0)
+X = rng.normal(size=(1024, 24)).astype(np.float32)
+Q = rng.normal(size=(16, 24)).astype(np.float32)
+gt_d, gt_i = brute_force_knn(Q, X, 10)
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+sidx = build_sharded(X, 4, BuildParams(max_degree=16, beam_width=48, t=16, iters=2, block=512))
+params = SearchParams(k=10, l0=10, l_max=64, alpha=2.0, adaptive=True, max_hops=512)
+for merge in ("all_gather", "ring"):
+    run = make_sharded_search(mesh, shard_axes=("data",), query_axis=None, merge=merge)
+    ids, dists = run(sidx, jnp.asarray(Q), params)
+    ids = np.asarray(ids)
+    rec = np.mean([len(set(ids[i].tolist()) & set(gt_i[i].tolist()))/10 for i in range(16)])
+    print(merge, "recall", rec)
+    assert rec > 0.9, (merge, rec)
+    d = np.asarray(dists)
+    assert (np.diff(d, axis=1) >= -1e-5).all()
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_merge_strategies_agree():
+    out = _run("""
+from repro.core import BuildParams, SearchParams
+from repro.core.distributed import build_sharded, make_sharded_search
+rng = np.random.default_rng(1)
+X = rng.normal(size=(512, 16)).astype(np.float32)
+Q = rng.normal(size=(8, 16)).astype(np.float32)
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+sidx = build_sharded(X, 4, BuildParams(max_degree=12, beam_width=24, t=8, iters=1, block=512))
+params = SearchParams(k=5, l0=8, l_max=32, adaptive=False, max_hops=256)
+runs = {m: make_sharded_search(mesh, shard_axes=("data",), query_axis=None, merge=m)
+        for m in ("all_gather", "ring")}
+outs = {m: np.asarray(r(sidx, jnp.asarray(Q), params)[0]) for m, r in runs.items()}
+assert (outs["all_gather"] == outs["ring"]).all()
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_quantized_sharded_search():
+    out = _run("""
+from repro.core import BuildParams, SearchParams
+from repro.core.distributed import build_sharded, make_sharded_search
+from repro.core.distances import brute_force_knn
+rng = np.random.default_rng(2)
+X = rng.normal(size=(1024, 32)).astype(np.float32)
+Q = rng.normal(size=(8, 32)).astype(np.float32)
+gt_d, gt_i = brute_force_knn(Q, X, 10)
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+sidx = build_sharded(X, 4, BuildParams(max_degree=16, beam_width=48, t=16, iters=2,
+                                       block=512, align_degree=True), quantized=True)
+params = SearchParams(k=10, l0=10, l_max=64, alpha=1.5, adaptive=True, max_hops=512)
+run = make_sharded_search(mesh, shard_axes=("data",), query_axis=None,
+                          merge="all_gather", quantized=True)
+ids, dists = run(sidx, jnp.asarray(Q), params)
+ids = np.asarray(ids)
+rec = np.mean([len(set(ids[i].tolist()) & set(gt_i[i].tolist()))/10 for i in range(8)])
+print("quantized recall", rec)
+assert rec > 0.8
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_query_axis_sharding():
+    out = _run("""
+from repro.core import BuildParams, SearchParams
+from repro.core.distributed import build_sharded, make_sharded_search
+rng = np.random.default_rng(3)
+X = rng.normal(size=(512, 16)).astype(np.float32)
+Q = rng.normal(size=(8, 16)).astype(np.float32)
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+sidx = build_sharded(X, 2, BuildParams(max_degree=12, beam_width=24, t=8, iters=1, block=512))
+params = SearchParams(k=5, l0=8, l_max=32, adaptive=False, max_hops=256)
+run = make_sharded_search(mesh, shard_axes=("data",), query_axis=("pod", "model"))
+ids, dists = run(sidx, jnp.asarray(Q), params)
+assert ids.shape == (8, 5)
+run2 = make_sharded_search(mesh, shard_axes=("data",), query_axis=None)
+ids2, _ = run2(sidx, jnp.asarray(Q), params)
+assert (np.asarray(ids) == np.asarray(ids2)).all()
+print("OK")
+""")
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell_small_devices():
+    """The dry-run driver machinery works end-to-end (8 fake devices, tiny
+    mesh) — the full 512-device run is exercised by benchmarks/dryrun."""
+    out = _run("""
+from repro.configs import get_arch
+from repro.launch.steps import build_cell
+from repro.launch.mesh import make_host_mesh
+from repro.launch.dryrun import parse_collectives
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+arch = get_arch("fm")
+cell = build_cell(arch, arch.shapes["serve_p99"], mesh)
+compiled = cell.lower().compile()
+mem = compiled.memory_analysis()
+cost = compiled.cost_analysis()
+coll = parse_collectives(compiled.as_text())
+assert cost.get("flops", 0) > 0
+print("OK", int(mem.temp_size_in_bytes), coll["total_operand_bytes"])
+""")
+    assert "OK" in out

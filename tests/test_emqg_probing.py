@@ -1,0 +1,97 @@
+"""δ-EMQG construction + probing search (Algorithm 5) behaviour."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BuildParams,
+    SearchParams,
+    ags_search,
+    build_emqg,
+    error_bounded_probing_search,
+    from_graph,
+    memory_footprint,
+    probing_search,
+)
+
+from conftest import recall_at_k
+
+
+@pytest.fixture(scope="module")
+def emqg(small_corpus):
+    p = BuildParams(max_degree=24, beam_width=48, t=24, iters=2, block=512,
+                    align_degree=True)
+    return build_emqg(small_corpus["base"], p)
+
+
+def test_degree_alignment_exact_m(emqg):
+    """Sec 6.1: every out-degree == M (FastScan / lane alignment)."""
+    deg = np.asarray(emqg.graph.degrees())
+    assert (deg == 24).mean() > 0.98   # connectivity repair may nudge a few
+    assert deg.min() >= 20
+
+
+def test_probing_recall(emqg, small_corpus):
+    res = error_bounded_probing_search(
+        emqg, jnp.asarray(small_corpus["queries"]), k=10, alpha=2.0, l_max=128)
+    assert recall_at_k(res.ids, small_corpus["gt_i"], 10) > 0.8
+
+
+def test_probing_counters(emqg, small_corpus):
+    """Probing must trade exact for approximate computations: far fewer
+    exact evaluations than a pure-exact search of the same width."""
+    from repro.core import error_bounded_search
+
+    q = jnp.asarray(small_corpus["queries"])
+    r_prob = error_bounded_probing_search(emqg, q, k=10, alpha=1.5, l_max=96)
+    r_exact = error_bounded_search(emqg.graph, q, k=10, alpha=1.5, l_max=96)
+    assert float(np.mean(np.asarray(r_prob.n_dist_comps))) < \
+        float(np.mean(np.asarray(r_exact.n_dist_comps)))
+    assert float(np.mean(np.asarray(r_prob.n_approx_comps))) > 0
+
+
+def test_probing_results_have_exact_distances(emqg, small_corpus):
+    res = error_bounded_probing_search(
+        emqg, jnp.asarray(small_corpus["queries"][:8]), k=5, alpha=1.5,
+        l_max=64)
+    ids = np.asarray(res.ids)
+    dists = np.asarray(res.dists)
+    base = small_corpus["base"]
+    qs = small_corpus["queries"][:8]
+    expect = np.linalg.norm(base[ids.ravel()].reshape(ids.shape + (-1,))
+                            - qs[:, None, :], axis=-1)
+    np.testing.assert_allclose(dists, expect, rtol=1e-4, atol=1e-4)
+
+
+def test_ags_ablation_runs(emqg, small_corpus):
+    p = SearchParams(k=10, l0=48, l_max=48, adaptive=False, max_hops=512)
+    res = ags_search(emqg, jnp.asarray(small_corpus["queries"]), p)
+    assert recall_at_k(res.ids, small_corpus["gt_i"], 10) > 0.5
+
+
+def test_probing_with_pallas_kernel(emqg, small_corpus):
+    """use_kernel=True routes S₊ through the Pallas bitdot kernel; results
+    must agree with the jnp path."""
+    p = SearchParams(k=5, l0=5, l_max=48, alpha=1.3, adaptive=True,
+                     max_hops=256)
+    q = jnp.asarray(small_corpus["queries"][:8])
+    r1 = probing_search(emqg, q, p, use_kernel=False)
+    r2 = probing_search(emqg, q, p, use_kernel=True)
+    assert (np.asarray(r1.ids) == np.asarray(r2.ids)).all()
+
+
+def test_from_graph_and_footprint(small_corpus):
+    from repro.core import build_approx
+
+    g = build_approx(small_corpus["base"],
+                     BuildParams(max_degree=16, beam_width=32, t=8, iters=1))
+    idx = from_graph(g)
+    fp = memory_footprint(idx)
+    n, d = small_corpus["base"].shape
+    assert fp["codes"] == n * ((d + 31) // 32) * 4
+    assert fp["vectors"] == n * d * 4
+    # 1-bit codes ≈ 32× smaller than f32 vectors (d=24 pads to one whole
+    # uint32 word → exactly 24× here)
+    assert fp["codes"] * 8 < fp["vectors"]
+    assert fp["codes"] * 24 <= fp["vectors"]

@@ -1,0 +1,113 @@
+"""Beyond-paper production features: streaming updates, filtered search,
+MIPS retrieval."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BuildParams, build_approx, error_bounded_search
+from repro.core.distances import brute_force_knn
+from repro.core.filtered import filtered_search
+from repro.core.mips import build_mips, ip_from_l2, mips_search
+from repro.core.updates import as_live, consolidate, delete, insert, search_live
+from repro.data import clustered_vectors
+
+from conftest import recall_at_k
+
+BP = BuildParams(max_degree=20, beam_width=48, t=24, iters=2, block=512)
+
+
+@pytest.fixture(scope="module")
+def live_setup():
+    base = clustered_vectors(1200, 32, 24, seed=8, scale=0.6)
+    extra = clustered_vectors(200, 32, 24, seed=9, scale=0.6)
+    queries = clustered_vectors(32, 32, 24, seed=10, scale=0.6)
+    return base, extra, queries
+
+
+def test_insert_matches_rebuild_quality(live_setup):
+    base, extra, queries = live_setup
+    full = np.concatenate([base, extra])
+    gt_d, gt_i = brute_force_knn(queries, full, 10)
+
+    live = as_live(build_approx(base, BP), BP)
+    live = insert(live, extra)
+    assert live.graph.n == 1400
+    res = search_live(live, queries, k=10, alpha=1.6, l_max=128)
+    rec_inc = recall_at_k(res.ids, gt_i, 10)
+
+    rebuilt = build_approx(full, BP)
+    res_rb = error_bounded_search(rebuilt, jnp.asarray(queries), k=10,
+                                  alpha=1.6, l_max=128)
+    rec_rb = recall_at_k(res_rb.ids, gt_i, 10)
+    assert rec_inc > rec_rb - 0.1, (rec_inc, rec_rb)
+    assert rec_inc > 0.7
+
+
+def test_delete_excludes_and_consolidate_compacts(live_setup):
+    base, _, queries = live_setup
+    live = as_live(build_approx(base, BP), BP)
+    dead = np.arange(0, 300)
+    live = delete(live, dead)
+    res = search_live(live, queries, k=10, alpha=1.6, l_max=128)
+    ids = np.asarray(res.ids)
+    assert not np.isin(ids[ids >= 0], dead).any()
+
+    # ground truth over survivors
+    alive_mask = np.ones(1200, bool)
+    alive_mask[dead] = False
+    gt_d, gt_i_local = brute_force_knn(queries, base[alive_mask], 10)
+    # map live ids to survivor-local ids for recall
+    remap = -np.ones(1200, np.int64)
+    remap[np.where(alive_mask)[0]] = np.arange(alive_mask.sum())
+    ids_local = np.where(ids >= 0, remap[np.maximum(ids, 0)], -1)
+    rec = np.mean([len(set(ids_local[i].tolist()) & set(gt_i_local[i].tolist())) / 10
+                   for i in range(len(queries))])
+    assert rec > 0.6
+
+    comp = consolidate(live)
+    assert comp.graph.n == 900
+    assert comp.frac_deleted == 0.0
+    res2 = error_bounded_search(comp.graph, jnp.asarray(queries), k=10,
+                                alpha=1.6, l_max=128)
+    ids2 = np.asarray(res2.ids)
+    rec2 = np.mean([len(set(ids2[i].tolist()) & set(gt_i_local[i].tolist())) / 10
+                    for i in range(len(queries))])
+    assert rec2 > 0.6
+
+
+def test_filtered_search_respects_mask(live_setup):
+    base, _, queries = live_setup
+    g = build_approx(base, BP)
+    rng = np.random.default_rng(0)
+    mask = rng.random(1200) < 0.3                     # 30% selectivity
+    res = filtered_search(g, queries, mask, k=5, alpha=1.6, l_max=192)
+    ids = np.asarray(res.ids)
+    valid = ids >= 0
+    assert valid.any()
+    assert mask[ids[valid]].all()
+    # recall against filtered brute force
+    sub = np.where(mask)[0]
+    gt_d, gt_loc = brute_force_knn(queries, base[sub], 5)
+    gt_ids = sub[gt_loc]
+    rec = np.mean([len(set(ids[i][ids[i] >= 0].tolist())
+                       & set(gt_ids[i].tolist())) / 5
+                   for i in range(len(queries))])
+    assert rec > 0.55
+
+
+def test_mips_matches_brute_force_ip(live_setup):
+    base, _, queries = live_setup
+    mips = build_mips(base, BP)
+    res = mips_search(mips, queries, k=10, alpha=1.6, l_max=128)
+    ids = np.asarray(res.ids)
+    # brute-force inner-product top-10
+    scores = queries @ base.T
+    gt = np.argsort(-scores, axis=1)[:, :10]
+    rec = np.mean([len(set(ids[i].tolist()) & set(gt[i].tolist())) / 10
+                   for i in range(len(queries))])
+    assert rec > 0.7
+    # score recovery identity
+    ip = ip_from_l2(queries, np.asarray(res.dists), mips.radius)
+    want = np.take_along_axis(scores, ids, axis=1)
+    np.testing.assert_allclose(ip, want, rtol=1e-3, atol=1e-2)

@@ -1,0 +1,106 @@
+"""End-to-end validation of the paper's theorems on exact δ-EMG builds."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    SearchParams,
+    build_exact,
+    error_bounded_search,
+    greedy_search,
+    local_optimum_mask,
+    search,
+    theorem4_delta_prime,
+)
+from repro.core.distances import brute_force_knn
+
+from conftest import gmm
+
+
+@pytest.fixture(scope="module")
+def exact_graph():
+    base = gmm(600, 16, 12, seed=3)
+    return build_exact(base, delta=0.1), base
+
+
+def test_theorem1_in_dataset_query_reaches_itself(exact_graph):
+    """Monotonic top-1 search with q ∈ V terminates at q (Thm. 1)."""
+    g, base = exact_graph
+    qs = jnp.asarray(base[::37])
+    res = greedy_search(g, qs, k=1, l=1, max_hops=2048)
+    ids = np.asarray(res.ids)[:, 0]
+    assert (ids == np.arange(0, 600, 37)).all()
+
+
+def test_theorem2_arbitrary_query_error_bound(exact_graph):
+    """Greedy top-1 from ANY start is a (1/δ)-approximation (Thm. 2)."""
+    g, base = exact_graph
+    rng = np.random.default_rng(7)
+    queries = gmm(48, 16, 12, seed=11) + 0.1 * rng.normal(size=(48, 16)).astype(np.float32)
+    gt_d, _ = brute_force_knn(queries, base, 1)
+    starts = rng.integers(0, 600, 48).astype(np.int32)
+    res = greedy_search(g, jnp.asarray(queries), k=1, l=1, max_hops=2048)
+    found = np.asarray(res.dists)[:, 0]
+    # d(q, r) ≤ (1/δ)·d(q, v₁)
+    assert (found <= gt_d[:, 0] / 0.1 + 1e-4).all()
+    # also from random starts, not just the medoid
+    p = SearchParams(k=1, l0=1, l_max=1, adaptive=False, max_hops=2048)
+    res2 = search(g, jnp.asarray(queries), p, start=jnp.asarray(starts))
+    found2 = np.asarray(res2.dists)[:, 0]
+    assert (found2 <= gt_d[:, 0] / 0.1 + 1e-4).all()
+
+
+def test_theorem4_rank_aware_topk_bound(exact_graph):
+    """When a local optimum exists in C \\ R_k, every returned r_(i) obeys
+    d(q, r_(i)) ≤ (1/δ')·d(q, v_(i)) with δ' = δ·d(q,u)/d(q,r_(k))."""
+    g, base = exact_graph
+    queries = gmm(48, 16, 12, seed=13)
+    k = 5
+    gt_d, _ = brute_force_knn(queries, base, k)
+    p = SearchParams(k=k, l0=k, l_max=64, alpha=2.0, adaptive=True,
+                     max_hops=2048)
+    res, cand_ids, cand_dists = search(g, jnp.asarray(queries), p,
+                                       with_candidates=True)
+    found, dprime = theorem4_delta_prime(
+        g, jnp.asarray(queries), cand_ids, cand_dists, k=k, delta=0.1)
+    found = np.asarray(found)
+    dprime = np.asarray(dprime)
+    dists = np.asarray(res.dists)
+    assert found.mean() > 0.5  # local optima common (paper Exp-6)
+    for i in np.where(found)[0]:
+        bound = gt_d[i] / max(dprime[i], 1e-9)
+        assert (dists[i] <= bound + 1e-4).all(), (dists[i], bound)
+
+
+def test_delta_prime_stronger_than_delta(exact_graph):
+    """Exp-7: achieved δ′ ≥ build δ (farther local optima tighten it)."""
+    g, base = exact_graph
+    queries = gmm(48, 16, 12, seed=17)
+    p = SearchParams(k=5, l0=5, l_max=64, alpha=2.5, adaptive=True,
+                     max_hops=2048)
+    _, cand_ids, cand_dists = search(g, jnp.asarray(queries), p,
+                                     with_candidates=True)
+    found, dprime = theorem4_delta_prime(
+        g, jnp.asarray(queries), cand_ids, cand_dists, k=5, delta=0.1)
+    d = np.asarray(dprime)[np.asarray(found)]
+    assert d.size > 0
+    assert np.mean(d >= 0.1) > 0.9
+
+
+def test_local_optimum_mask_brute_check(exact_graph):
+    g, base = exact_graph
+    queries = jnp.asarray(gmm(8, 16, 12, seed=19))
+    cand_ids = jnp.asarray(
+        np.random.default_rng(0).integers(0, 600, (8, 12)).astype(np.int32))
+    mask = np.asarray(local_optimum_mask(g, queries, cand_ids))
+    nbrs = np.asarray(g.neighbors)
+    for b in range(8):
+        q = np.asarray(queries[b])
+        for j in range(12):
+            c = int(cand_ids[b, j])
+            ns = nbrs[c]
+            ns = ns[ns >= 0]
+            dc = np.linalg.norm(base[c] - q)
+            dn = np.linalg.norm(base[ns] - q, axis=1).min()
+            assert bool(mask[b, j]) == bool(dn >= dc)
