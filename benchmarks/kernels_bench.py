@@ -1,20 +1,36 @@
-"""Kernel microbenchmarks: Pallas (interpret on CPU) vs jnp reference —
-correctness-at-scale plus a CPU wall-clock proxy.  The real perf claim for
-kernels is structural (BlockSpec tiling, §Roofline); these numbers guard
-against regressions in the wrappers."""
+"""Kernel + engine microbenchmarks: Pallas (interpret on CPU) vs jnp
+reference, and the batch-level beam engine vs the seed per-query engine.
+
+Two kinds of rows:
+
+* Kernel correctness-at-scale with a CPU wall-clock proxy — the real perf
+  claim for kernels is structural (BlockSpec tiling, multi-row DMA blocks,
+  §Roofline); these numbers guard against regressions in the wrappers.
+* Engine distance-evaluation throughput (evals/s) at serving batch sizes —
+  the ISSUE-1 headline: the batch engine hoists the gather+L2 out of the
+  per-query loop, so one lock-step hop evaluates ``B×W×M`` distances in a
+  single fused call instead of B small ones, and the packed visited bitset
+  replaces the O(M·T) ring-buffer compare wall.
+
+Results land in ``benchmarks/results/kernels_bench.json`` and in the repo
+root ``BENCH_kernels.json`` (the perf-trajectory file CI uploads).
+"""
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import SearchParams, legacy_search, search
 from repro.kernels.bitdot.ops import bitdot, fused_estimate
-from repro.kernels.l2dist.ops import batched_l2
+from repro.kernels.l2dist.ops import batched_l2, gather_l2, gather_l2_tiled
 
-from .common import emit, save_json
+from .common import corpus, emit, index_emg, save_json
 
 
 def _time(fn, *args, repeats=3):
@@ -29,9 +45,85 @@ def _time(fn, *args, repeats=3):
     return best, out
 
 
+def _bench_gather(out: dict) -> None:
+    """Single-row vs tiled gather_l2 vs the jnp reference."""
+    rng = np.random.default_rng(1)
+    n, d = 8192, 128
+    base = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    for B, M in ((8, 64), (64, 96)):
+        ids = jnp.asarray(rng.integers(0, n, (B, M)).astype(np.int32))
+        qs = jnp.asarray(rng.normal(size=(B, d)).astype(np.float32))
+        t_ref, o_ref = _time(
+            lambda b, i, q: gather_l2(b, i, q, use_ref=True), base, ids, qs)
+        t_row, o_row = _time(gather_l2, base, ids, qs)
+        t_til, o_til = _time(gather_l2_tiled, base, ids, qs)
+        err_row = float(jnp.max(jnp.abs(o_ref - o_row)))
+        err_til = float(jnp.max(jnp.abs(o_ref - o_til)))
+        key = f"gather_l2_B{B}xM{M}"
+        out[key] = {
+            "ref_s": t_ref,
+            "pallas_single_row_interpret_s": t_row,
+            "pallas_tiled_interpret_s": t_til,
+            "maxerr_single_row": err_row,
+            "maxerr_tiled": err_til,
+        }
+        emit(f"kernel_{key}_ref", t_ref * 1e6, f"n{n}xd{d}")
+        emit(f"kernel_{key}_single_row", t_row * 1e6, f"maxerr={err_row:.1e}")
+        emit(f"kernel_{key}_tiled", t_til * 1e6, f"maxerr={err_til:.1e}")
+
+
+def _bench_engines(out: dict) -> None:
+    """Seed per-query engine vs batch beam engine: distance evals per second
+    at serving batch sizes (B ≥ 32 is the acceptance bar)."""
+    base, queries, _gt_d, _gt_i = corpus()
+    g = index_emg()
+    rows = []
+    for B in (32, 64):
+        q = jnp.asarray(queries[:B])
+
+        def legacy_fn(qq):
+            p = SearchParams(k=10, l0=10, l_max=96, alpha=1.5, adaptive=True,
+                             max_hops=2048, beam_width=1)
+            return legacy_search(g, qq, p)
+
+        t_leg, r_leg = _time(legacy_fn, q)
+        evals_leg = float(np.sum(np.asarray(r_leg.n_dist_comps)))
+        tput_leg = evals_leg / t_leg
+        rows.append({"engine": "legacy_per_query", "B": B,
+                     "beam_width": 1, "time_s": t_leg,
+                     "dist_evals": evals_leg, "evals_per_s": tput_leg})
+        emit(f"engine_legacy_B{B}", t_leg * 1e6,
+             f"evals/s={tput_leg:.3e}")
+
+        for W in (1, 4, 8):
+
+            def beam_fn(qq, w=W):
+                p = SearchParams(k=10, l0=10, l_max=96, alpha=1.5,
+                                 adaptive=True, max_hops=2048, beam_width=w)
+                return search(g, qq, p)  # backend="auto": kernel on TPU
+
+            t_beam, r_beam = _time(beam_fn, q)
+            evals = float(np.sum(np.asarray(r_beam.n_dist_comps)))
+            tput = evals / t_beam
+            rows.append({"engine": "beam_batch", "B": B, "beam_width": W,
+                         "time_s": t_beam, "dist_evals": evals,
+                         "evals_per_s": tput,
+                         "speedup_vs_legacy": t_leg / t_beam})
+            emit(f"engine_beam_B{B}_W{W}", t_beam * 1e6,
+                 f"evals/s={tput:.3e} speedup={t_leg / t_beam:.2f}x")
+    out["engine_dist_throughput"] = rows
+    out["engine_summary"] = {
+        "best_beam_evals_per_s": max(
+            r["evals_per_s"] for r in rows if r["engine"] == "beam_batch"),
+        "legacy_evals_per_s": max(
+            r["evals_per_s"] for r in rows
+            if r["engine"] == "legacy_per_query"),
+    }
+
+
 def run() -> dict:
     rng = np.random.default_rng(0)
-    out = {}
+    out = {"backend": jax.default_backend()}
 
     B, M, d = 64, 64, 128
     rows = jnp.asarray(rng.normal(size=(B, M, d)).astype(np.float32))
@@ -42,6 +134,8 @@ def run() -> dict:
     out["batched_l2"] = {"ref_s": t_ref, "pallas_interpret_s": t_pal, "maxerr": err}
     emit("kernel_batched_l2_ref", t_ref * 1e6, f"B{B}xM{M}xd{d}")
     emit("kernel_batched_l2_pallas", t_pal * 1e6, f"maxerr={err:.1e}")
+
+    _bench_gather(out)
 
     m, dim = 4096, 128
     W = dim // 32
@@ -61,7 +155,14 @@ def run() -> dict:
                      codes, q)
     out["fused_estimate"] = {"pallas_interpret_s": t_f}
     emit("kernel_fused_estimate", t_f * 1e6, f"m{m}xd{dim}")
+
+    _bench_engines(out)
+
     save_json("kernels_bench", out)
+    root_path = os.path.join(os.path.dirname(__file__), "..",
+                             "BENCH_kernels.json")
+    with open(os.path.abspath(root_path), "w") as f:
+        json.dump(out, f, indent=1)
     return out
 
 

@@ -20,6 +20,7 @@ from .common import corpus, emit, index_baseline, index_emg, index_emqg, recall,
 
 ALPHAS = (1.0, 1.1, 1.4, 2.0, 3.0)
 WIDTHS = (16, 40, 96)
+BEAM_WIDTHS = (1, 4)   # per-hop frontier of the lock-step batch engine
 
 
 def run(k_values=(1, 10)) -> dict:  # k=100 representable; 1-core trace cost prohibitive
@@ -31,12 +32,15 @@ def run(k_values=(1, 10)) -> dict:  # k=100 representable; 1-core trace cost pro
         rows = []
         g = index_emg()
         for alpha in ALPHAS:
-            qps, res = timed_qps(
-                lambda qq, a=alpha: error_bounded_search(
-                    g, qq, k=k, alpha=a, l_max=max(192, 2 * k)), q)
-            rows.append({"method": "delta-emg", "param": alpha,
-                         "recall": recall(res.ids, gt_i, k), "qps": qps,
-                         "ndist": float(np.mean(np.asarray(res.n_dist_comps)))})
+            for bw in BEAM_WIDTHS:
+                qps, res = timed_qps(
+                    lambda qq, a=alpha, w=bw: error_bounded_search(
+                        g, qq, k=k, alpha=a, l_max=max(192, 2 * k),
+                        beam_width=w), q)
+                method = "delta-emg" if bw == 1 else f"delta-emg-bw{bw}"
+                rows.append({"method": method, "param": alpha,
+                             "recall": recall(res.ids, gt_i, k), "qps": qps,
+                             "ndist": float(np.mean(np.asarray(res.n_dist_comps)))})
         idx = index_emqg()
         for alpha in ALPHAS:
             qps, res = timed_qps(
@@ -58,8 +62,8 @@ def run(k_values=(1, 10)) -> dict:  # k=100 representable; 1-core trace cost pro
         results[f"k={k}"] = rows
 
         # headline: best QPS at ≥0.9 recall per method
-        for method in ("delta-emg", "delta-emqg", "nsg", "tau_mg", "vamana",
-                       "nsw", "knn"):
+        for method in ("delta-emg", "delta-emg-bw4", "delta-emqg", "nsg",
+                       "tau_mg", "vamana", "nsw", "knn"):
             ok = [r for r in rows if r["method"] == method and r["recall"] >= 0.9]
             if ok:
                 best = max(ok, key=lambda r: r["qps"])

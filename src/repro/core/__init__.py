@@ -6,7 +6,10 @@ Public API:
                        build_emqg (Sec. 6.1), baselines.BUILDERS
     Search:            greedy_search (Alg. 1), error_bounded_search (Alg. 3),
                        probing_search / error_bounded_probing_search (Alg. 5),
-                       ags_search (ablation)
+                       ags_search (ablation).  All route through the
+                       batch-level beam engine (SearchParams.beam_width);
+                       legacy_search / legacy_probing_search are the seed
+                       per-query engines kept as parity oracles.
     Distribution:      build_sharded, make_sharded_search
     Theory probes:     local_optimum_mask, theorem4_delta_prime
 """
@@ -25,14 +28,17 @@ from .emqg import build_emqg, from_graph, memory_footprint  # noqa: F401
 from .search import (  # noqa: F401
     error_bounded_search,
     greedy_search,
+    legacy_search,
     local_optimum_mask,
+    make_batch_dist_fn,
     search,
     theorem4_delta_prime,
 )
 from .probing import (  # noqa: F401
     ags_search,
     error_bounded_probing_search,
+    legacy_probing_search,
     probing_search,
 )
-from . import baselines, distances, distributed, geometry, rabitq  # noqa: F401
+from . import baselines, bitset, distances, distributed, geometry, rabitq  # noqa: F401
 from . import filtered, mips, updates  # noqa: F401  (beyond-paper features)

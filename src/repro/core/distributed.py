@@ -36,6 +36,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+if hasattr(jax, "shard_map"):                      # jax ≥ 0.6
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+else:                                              # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
 from .build_approx import BuildParams, build_approx
 from .emqg import build_emqg
 from .probing import probing_search
@@ -166,12 +173,12 @@ def make_sharded_search(mesh, shard_axes=("data",), query_axis=None,
             ShardedIndex(index=index_specs, offsets=P(shard_axes), n_total=sidx.n_total),
             q_spec,
         )
-        fn = jax.shard_map(
+        fn = _shard_map(
             partial(body, params=params),
             mesh=mesh,
             in_specs=in_specs,
             out_specs=(q_spec, q_spec),
-            check_vma=False,
+            **{_CHECK_KW: False},
         )
         return fn(sidx, queries)
 

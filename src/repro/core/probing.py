@@ -6,12 +6,28 @@ promotes the best approximate candidate to the exact tier only when the
 exact frontier has stopped improving.  The adaptive outer-``l`` loop and the
 α stop rule are inherited from Algorithm 3 and apply to the exact tier.
 
-Fixed-shape state (vmapped across the query batch, same discipline as
-``search.py``):
+Like ``search.py``, two engines:
+
+``probing_search``        — the batch-level beam engine.  One ``while_loop``
+                            drives the whole batch; per iteration each query
+                            either *probes* its ``beam_width`` best unprobed
+                            approximate candidates (their exact distances are
+                            evaluated in one fused gather+L2 call over
+                            ``[B, W]`` ids) or *expands* its W best unvisited
+                            exact candidates (``B×W×M`` neighbor ids deduped
+                            against a packed visited bitset, approximate
+                            distances in one batched RaBitQ estimate).  The
+                            NeedProbing rule (lines 22-28) decides per query;
+                            finished queries are masked no-ops.
+
+``legacy_probing_search`` — the seed per-query engine (``vmap`` over a
+                            per-query ``while_loop``, one op per hop,
+                            ring-buffer dedup).  Parity oracle.
+
+Fixed-shape state (either engine):
 
   C_e — exact candidates  (ids, exact d², visited flags)   cap l_max+1
   C_a — approx candidates (ids, approx d², probed flags)   cap l_max+1
-  T   — ring buffer of every id that ever entered either tier, for dedup
 
 Also provides AGS (approximate greedy search + exact rerank — SymphonyQG's
 search, the paper's δ-EMQG-AGS ablation).
@@ -26,8 +42,210 @@ import jax
 import jax.numpy as jnp
 
 from . import rabitq
-from .search import _merge_topc, make_exact_dist_fn
+from .bitset import bitset_make, bitset_set, bitset_test, unique_per_row
+from .search import (
+    _merge_topc,
+    _search_one,
+    adaptive_transition,
+    batch_merge_topc,
+    make_batch_dist_fn,
+    make_exact_dist_fn,
+    resolve_beam_width,
+    select_top_w,
+)
 from .types import INVALID_ID, EMQGIndex, SearchParams, SearchResult
+
+
+# ---------------------------------------------------------------------------
+# Batch-level beam engine.
+# ---------------------------------------------------------------------------
+
+
+class _BeamPState(NamedTuple):
+    ce_ids: jax.Array      # int32[B, C]  exact tier
+    ce_d2: jax.Array       # f32[B, C]
+    ce_vis: jax.Array      # bool[B, C]
+    ca_ids: jax.Array      # int32[B, C]  approx tier
+    ca_d2: jax.Array       # f32[B, C]
+    ca_prb: jax.Array      # bool[B, C]
+    seen: jax.Array        # uint32[B, nw] every id that entered either tier
+    d2_last: jax.Array     # f32[B]  exact d² of the last expanded node
+    l: jax.Array           # int32[B]
+    n_dist: jax.Array      # int32[B]
+    n_approx: jax.Array    # int32[B]
+    n_hops: jax.Array      # int32[B]
+    done: jax.Array        # bool[B]
+    saturated: jax.Array   # bool[B]
+
+
+def _beam_probing_batch(
+    neighbors: jax.Array,      # int32[n, M]
+    n_nodes: int,
+    batch_exact: Callable,     # (queries [B,d], ids [B,K]) → d2 [B,K]
+    batch_approx: Callable,    # (ids [B,K]) → d2 [B,K]
+    queries: jax.Array,
+    start: jax.Array,
+    p: SearchParams,
+) -> _BeamPState:
+    B = queries.shape[0]
+    C = p.l_max + 1
+    W = resolve_beam_width(p, C)
+    M = neighbors.shape[1]
+
+    pos = jnp.arange(C, dtype=jnp.int32)[None, :]
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+
+    d2_s = batch_exact(queries, start[:, None])[:, 0]
+    st = _BeamPState(
+        ce_ids=jnp.full((B, C), INVALID_ID, jnp.int32).at[:, 0].set(start),
+        ce_d2=jnp.full((B, C), jnp.inf, jnp.float32).at[:, 0].set(d2_s),
+        ce_vis=jnp.zeros((B, C), jnp.bool_),
+        ca_ids=jnp.full((B, C), INVALID_ID, jnp.int32),
+        ca_d2=jnp.full((B, C), jnp.inf, jnp.float32),
+        ca_prb=jnp.zeros((B, C), jnp.bool_),
+        seen=bitset_set(bitset_make(B, n_nodes), start[:, None]),
+        d2_last=d2_s,
+        l=jnp.full((B,), min(max(p.l0, p.k), p.l_max), jnp.int32),
+        n_dist=jnp.ones((B,), jnp.int32),
+        n_approx=jnp.zeros((B,), jnp.int32),
+        n_hops=jnp.zeros((B,), jnp.int32),
+        done=jnp.zeros((B,), jnp.bool_),
+        saturated=jnp.zeros((B,), jnp.bool_),
+    )
+
+    def active_mask(s: _BeamPState):
+        return (~s.done) & (s.n_hops < p.max_hops)
+
+    def cond(s: _BeamPState):
+        return jnp.any(active_mask(s))
+
+    def body(s: _BeamPState) -> _BeamPState:
+        active = active_mask(s)
+        win_e = (pos < s.l[:, None]) & (s.ce_ids >= 0) & (~s.ce_vis)
+        win_e &= active[:, None]
+        win_a = (pos < s.l[:, None]) & (s.ca_ids >= 0) & (~s.ca_prb)
+        win_a &= active[:, None]
+        has_u = jnp.any(win_e, axis=1)
+        has_w = jnp.any(win_a, axis=1)
+        d2_u = jnp.min(jnp.where(win_e, s.ce_d2, jnp.inf), axis=1)
+        d2_w = jnp.min(jnp.where(win_a, s.ca_d2, jnp.inf), axis=1)
+
+        # NeedProbing (lines 22-28): probe when the exact frontier stopped
+        # improving and the approx tier has something closer.
+        need_probe = jnp.where(
+            ~has_u,
+            has_w,
+            (d2_u > s.d2_last) & has_w & (d2_w < d2_u),
+        )
+        probing = active & need_probe
+        expanding = active & ~need_probe & has_u
+        conv = active & ~has_u & ~has_w
+
+        # -- probe branch: exact distances for W best unprobed approx --------
+        sel_w, selv_w = select_top_w(s.ca_d2, win_a, W)
+        selv_w &= probing[:, None]
+        prb_sel = jnp.take_along_axis(s.ca_prb, sel_w, axis=1) | selv_w
+        ca_prb = s.ca_prb.at[rows, sel_w].set(prb_sel)
+        w_ids = jnp.where(
+            selv_w, jnp.take_along_axis(s.ca_ids, sel_w, axis=1), INVALID_ID)
+        d2_probe = batch_exact(queries, w_ids)                 # [B, W] fused
+        n_dist = s.n_dist + jnp.sum(w_ids >= 0, axis=1).astype(jnp.int32)
+
+        # -- expand branch: approx distances for W·M neighbor ids ------------
+        sel_u, selv_u = select_top_w(s.ce_d2, win_e, W)
+        selv_u &= expanding[:, None]
+        vis_sel = jnp.take_along_axis(s.ce_vis, sel_u, axis=1) | selv_u
+        ce_vis = s.ce_vis.at[rows, sel_u].set(vis_sel)
+        u_ids = jnp.where(
+            selv_u, jnp.take_along_axis(s.ce_ids, sel_u, axis=1), INVALID_ID)
+        d2_u_sel = jnp.where(
+            selv_u, jnp.take_along_axis(s.ce_d2, sel_u, axis=1), -jnp.inf)
+        # "last expanded" = the worst of this hop's frontier (W=1: exactly u).
+        d2_last = jnp.where(expanding, jnp.max(d2_u_sel, axis=1), s.d2_last)
+
+        nbrs = jnp.take(neighbors, jnp.maximum(u_ids, 0), axis=0)
+        nbrs = jnp.where(selv_u[:, :, None], nbrs, INVALID_ID).reshape(B, W * M)
+        fresh = (nbrs >= 0) & ~bitset_test(s.seen, nbrs)
+        new_ids = unique_per_row(nbrs, fresh)
+        seen = bitset_set(s.seen, new_ids)
+        d2a = batch_approx(new_ids)                            # [B, W·M]
+        n_approx = s.n_approx + jnp.sum(new_ids >= 0, axis=1).astype(jnp.int32)
+
+        n_hops = s.n_hops + jnp.sum(selv_w, axis=1).astype(jnp.int32) \
+            + jnp.sum(selv_u, axis=1).astype(jnp.int32)
+
+        # -- merges (per query only one branch contributes real entries) -----
+        ce_ids, ce_d2, ce_vis = batch_merge_topc(
+            s.ce_ids, s.ce_d2, ce_vis,
+            w_ids, d2_probe, jnp.zeros_like(w_ids, jnp.bool_), C)
+        ca_ids, ca_d2, ca_prb = batch_merge_topc(
+            s.ca_ids, s.ca_d2, ca_prb,
+            new_ids, d2a, jnp.zeros_like(fresh), C)
+
+        # -- adaptive transition for exhausted queries -----------------------
+        l, done, saturated = adaptive_transition(
+            p, ce_d2, s.l, s.done, s.saturated, conv)
+
+        return _BeamPState(
+            ce_ids=ce_ids, ce_d2=ce_d2, ce_vis=ce_vis,
+            ca_ids=ca_ids, ca_d2=ca_d2, ca_prb=ca_prb,
+            seen=seen, d2_last=d2_last, l=l, n_dist=n_dist,
+            n_approx=n_approx, n_hops=n_hops, done=done, saturated=saturated)
+
+    return jax.lax.while_loop(cond, body, st)
+
+
+@partial(jax.jit, static_argnames=("params", "use_kernel", "with_candidates",
+                                   "backend"))
+def probing_search(
+    index: EMQGIndex,
+    queries: jax.Array,
+    params: SearchParams,
+    start: Optional[jax.Array] = None,
+    use_kernel: bool = False,
+    with_candidates: bool = False,
+    backend: str = "auto",
+):
+    """Batched Algorithm 5 on the lock-step beam engine.  ``use_kernel``
+    routes the S₊ contraction through the Pallas bitdot kernel
+    (interpret-mode on CPU); ``backend`` selects the exact-tier gather+L2
+    implementation (see ``make_batch_dist_fn``)."""
+    B = queries.shape[0]
+    g, codes = index.graph, index.codes
+    if start is None:
+        start = jnp.broadcast_to(g.medoid, (B,)).astype(jnp.int32)
+    batch_exact = make_batch_dist_fn(g.vectors, backend)
+    bitdot_fn = None
+    if use_kernel:
+        from repro.kernels.bitdot.ops import bitdot as bitdot_fn  # lazy: optional dep
+
+    ctx = jax.vmap(lambda q: rabitq.prepare_query(codes, q))(queries)
+
+    def batch_approx(ids):
+        return jax.vmap(
+            lambda c, i: rabitq.estimate_sqdist(codes, c, i, bitdot_fn=bitdot_fn)
+        )(ctx, ids)
+
+    st = _beam_probing_batch(g.neighbors, g.n, batch_exact, batch_approx,
+                             queries, start, params)
+    k = params.k
+    res = SearchResult(
+        ids=st.ce_ids[:, :k],
+        dists=jnp.sqrt(jnp.maximum(st.ce_d2[:, :k], 0.0)),
+        n_dist_comps=st.n_dist,
+        n_approx_comps=st.n_approx,
+        n_hops=st.n_hops,
+        final_l=st.l,
+        saturated=st.saturated,
+    )
+    if with_candidates:
+        return res, st.ce_ids, jnp.sqrt(jnp.maximum(st.ce_d2, 0.0))
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Legacy per-query engine (parity oracle — see module docstring).
+# ---------------------------------------------------------------------------
 
 
 class _PState(NamedTuple):
@@ -50,7 +268,6 @@ class _PState(NamedTuple):
 
 def _probing_one(neighbors, exact_fn, approx_fn, q, ctx, start, p: SearchParams):
     C = p.l_max + 1
-    M = neighbors.shape[1]
     T = 2 * p.max_hops  # both tiers feed the ring
 
     d2_s = exact_fn(q, start[None])[0]
@@ -161,7 +378,7 @@ def _probing_one(neighbors, exact_fn, approx_fn, q, ctx, start, p: SearchParams)
 
 
 @partial(jax.jit, static_argnames=("params", "use_kernel", "with_candidates"))
-def probing_search(
+def legacy_probing_search(
     index: EMQGIndex,
     queries: jax.Array,
     params: SearchParams,
@@ -169,8 +386,8 @@ def probing_search(
     use_kernel: bool = False,
     with_candidates: bool = False,
 ):
-    """Batched Algorithm 5.  ``use_kernel`` routes the S₊ contraction through
-    the Pallas bitdot kernel (interpret-mode on CPU)."""
+    """Seed per-query Algorithm 5 engine.  Parity oracle for
+    ``probing_search``; not on any hot path."""
     B = queries.shape[0]
     g, codes = index.graph, index.codes
     if start is None:
@@ -206,9 +423,9 @@ def probing_search(
 def error_bounded_probing_search(index: EMQGIndex, queries: jax.Array, k: int,
                                  alpha: float, l_max: int = 256,
                                  l_step: int = 1, max_hops: int = 4096,
-                                 **kw) -> SearchResult:
+                                 beam_width: int = 1, **kw) -> SearchResult:
     p = SearchParams(k=k, l0=k, l_max=l_max, l_step=l_step, alpha=alpha,
-                     adaptive=True, max_hops=max_hops)
+                     adaptive=True, max_hops=max_hops, beam_width=beam_width)
     return probing_search(index, queries, p, **kw)
 
 
@@ -221,8 +438,6 @@ def error_bounded_probing_search(index: EMQGIndex, queries: jax.Array, k: int,
 @partial(jax.jit, static_argnames=("params",))
 def ags_search(index: EMQGIndex, queries: jax.Array, params: SearchParams,
                start: Optional[jax.Array] = None) -> SearchResult:
-    from .search import _search_one  # same engine, approx dist plug
-
     B = queries.shape[0]
     g, codes = index.graph, index.codes
     if start is None:

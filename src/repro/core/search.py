@@ -2,7 +2,31 @@
 
 Implements Algorithm 1 (greedy beam search) and Algorithm 3 (error-bounded
 adaptive top-k search) of the paper as a *single* parameterized engine,
-reformulated for lock-step execution on TPU:
+reformulated for lock-step execution on TPU.  Two engines live here:
+
+``search``        — the **batch-level beam engine** (default).  One
+                    ``while_loop`` drives the whole query batch: each
+                    iteration selects the ``beam_width`` (W) best unvisited
+                    in-window candidates per query, gathers all ``B×W×M``
+                    neighbor ids at once, dedups them against a packed
+                    ``uint32`` visited bitset (O(1) test/set — see
+                    ``bitset.py``), and evaluates every fresh distance in a
+                    *single* fused gather+L2 call over ``[B, W·M]`` ids.  On
+                    TPU that call is the Pallas ``gather_l2_tiled`` kernel —
+                    one big contraction per hop for the MXU instead of B tiny
+                    ones; on CPU it lowers to the identical-math jnp path.
+                    Queries that have exhausted their window take the
+                    adaptive-α transition (grow ``l`` or stop) in the same
+                    lock-step iteration; finished queries are masked no-ops.
+
+``legacy_search`` — the seed's per-query engine (``vmap`` over a per-query
+                    ``while_loop``, one node expanded per hop, ring-buffer
+                    visited set).  Kept as the parity oracle: at
+                    ``beam_width=1`` the beam engine expands nodes in the
+                    identical order and returns identical ids/dists.  Slated
+                    for deletion once the parity suite has soaked (ROADMAP).
+
+Shared semantics (both engines):
 
 * The candidate set ``C`` is a fixed-width sorted array (ids, squared dists,
   visited flags) of capacity ``l_max + 1``.  Algorithm 3's literal "keep top
@@ -14,37 +38,308 @@ reformulated for lock-step execution on TPU:
   retains the full ``l_max+1`` buffer — the window ``l`` still gates which
   candidates may be *expanded* and the stop rule still reads ``C[l]``/``C[k]``,
   which realizes the intended adaptive behavior (and is how NSG-style pools
-  with a growing capacity behave).  Both variants are measured in
-  EXPERIMENTS.md §Perf.
-* The visited set ``T`` is a ring buffer of the expanded node ids (at most
-  one per hop, so ``max_hops`` bounds it).  Membership tests are vectorized
-  broadcast-compares — no hashing, no host round trips.
-* Per-query adaptive state (current ``l``, done flags, distance counters)
-  rides in the ``while_loop`` carry; ``vmap`` turns the per-query loop into a
-  batched lock-step loop where finished queries are masked no-ops.
+  with a growing capacity behave).
+* The α-stop rule fires only when a query's window holds no unvisited
+  candidate, so widening the per-hop frontier (W > 1) never skips the stop
+  test — it only reorders the expansion schedule, which monotonic-graph
+  convergence tolerates (the closure "expand until the window is exhausted"
+  reaches the same fixed point family).
 
-The distance evaluation is pluggable (``dist_fn``) so the δ-EMQG probing
-search (``probing.py``) and the Pallas kernels (``repro.kernels``) can swap
-in quantized / fused implementations without touching the control flow.
+The distance evaluation is pluggable: the beam engine takes a ``backend``
+("auto" | "jnp" | "kernel" | "kernel_tiled"), the legacy engine a ``dist_fn``
+so the δ-EMQG probing search (``probing.py``) can swap in quantized
+implementations without touching the control flow.
 """
 
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from .bitset import bitset_make, bitset_set, bitset_test, unique_per_row
 from .types import (
     INVALID_ID,
-    EMQGIndex,
     GraphIndex,
     SearchParams,
     SearchResult,
     take_rows,
 )
+
+
+def make_exact_dist_fn(vectors: jax.Array) -> Callable:
+    """dist_fn(q, ids) → squared distances f32[M] (invalid ids → +inf)."""
+
+    def dist_fn(q, ids):
+        rows = take_rows(vectors, ids)
+        diff = rows.astype(jnp.float32) - q.astype(jnp.float32)[None, :]
+        d2 = jnp.sum(diff * diff, axis=-1)
+        return jnp.where(ids >= 0, d2, jnp.inf)
+
+    return dist_fn
+
+
+def make_batch_dist_fn(vectors: jax.Array, backend: str = "auto") -> Callable:
+    """batch_dist(queries f32[B, d], ids int32[B, K]) → d2 f32[B, K].
+
+    Backends:
+      * ``jnp``          — fused batch gather + reduce in plain XLA.
+      * ``kernel``       — Pallas ``gather_l2`` (one row DMA per grid step).
+      * ``kernel_tiled`` — Pallas ``gather_l2_tiled`` (multi-row DMA blocks).
+      * ``auto``         — ``kernel_tiled`` on TPU, ``jnp`` elsewhere
+                           (interpret-mode Pallas inside a hot loop would be
+                           orders of magnitude slower than XLA on CPU).
+    """
+    if backend == "auto":
+        backend = "kernel_tiled" if jax.default_backend() == "tpu" else "jnp"
+    if backend == "jnp":
+
+        def batch_dist(queries, ids):
+            rows = take_rows(vectors, ids)                     # [B, K, d]
+            diff = rows.astype(jnp.float32) - queries.astype(jnp.float32)[:, None, :]
+            d2 = jnp.sum(diff * diff, axis=-1)
+            return jnp.where(ids >= 0, d2, jnp.inf)
+
+        return batch_dist
+    if backend in ("kernel", "kernel_tiled"):
+        from repro.kernels.l2dist import ops as l2ops  # lazy: optional dep
+
+        fn = l2ops.gather_l2_tiled if backend == "kernel_tiled" else l2ops.gather_l2
+
+        def batch_dist(queries, ids):
+            return fn(vectors.astype(jnp.float32), ids,
+                      queries.astype(jnp.float32))
+
+        return batch_dist
+    raise ValueError(f"unknown distance backend: {backend!r}")
+
+
+def _merge_topc(ids_a, d2_a, vis_a, ids_b, d2_b, vis_b, cap: int):
+    """Merge two (id, d2, visited) lists, keep the ``cap`` smallest by d2."""
+    ids = jnp.concatenate([ids_a, ids_b])
+    d2 = jnp.concatenate([d2_a, d2_b])
+    vis = jnp.concatenate([vis_a, vis_b])
+    neg, idx = jax.lax.top_k(-d2, cap)
+    return ids[idx], -neg, vis[idx]
+
+
+def batch_merge_topc(ids_a, d2_a, vis_a, ids_b, d2_b, vis_b, cap: int):
+    """Batched merge: [B, Ca] ⊎ [B, Cb] → top-``cap`` smallest d2 per row.
+
+    ``lax.top_k`` is stable (lower index wins ties), so appending the new
+    entries after the existing buffer preserves the buffer's order for
+    no-op merges — which is what keeps masked queries frozen in lock-step.
+    """
+    ids = jnp.concatenate([ids_a, ids_b], axis=1)
+    d2 = jnp.concatenate([d2_a, d2_b], axis=1)
+    vis = jnp.concatenate([vis_a, vis_b], axis=1)
+    neg, idx = jax.lax.top_k(-d2, cap)
+    take = lambda x: jnp.take_along_axis(x, idx, axis=1)  # noqa: E731
+    return take(ids), -neg, take(vis)
+
+
+# ---------------------------------------------------------------------------
+# Batch-level beam engine.
+# ---------------------------------------------------------------------------
+
+
+class _BeamState(NamedTuple):
+    cand_ids: jax.Array    # int32[B, C]
+    cand_d2: jax.Array     # f32[B, C]   squared dists, ascending (inf = empty)
+    cand_vis: jax.Array    # bool[B, C]
+    seen: jax.Array        # uint32[B, nw] packed visited bitset
+    l: jax.Array           # int32[B]    current candidate window (Alg. 3)
+    n_dist: jax.Array      # int32[B]    exact distance evaluations
+    n_hops: jax.Array      # int32[B]    expansions
+    done: jax.Array        # bool[B]
+    saturated: jax.Array   # bool[B]     l hit l_max before the α-rule fired
+
+
+def select_top_w(d2: jax.Array, mask: jax.Array, w: int):
+    """Per-row W best (smallest d2) slots among ``mask``.
+
+    Returns (sel int32[B, W], valid bool[B, W]); ``lax.top_k`` stability
+    makes W=1 coincide with the legacy engine's ``argmin`` tie-break.
+    """
+    masked = jnp.where(mask, d2, jnp.inf)
+    neg, sel = jax.lax.top_k(-masked, w)
+    return sel, jnp.isfinite(neg)
+
+
+def resolve_beam_width(p: SearchParams, cap: int) -> int:
+    """Validate and clamp ``p.beam_width`` against the buffer capacity."""
+    if p.beam_width < 1:
+        raise ValueError(
+            f"beam_width must be ≥ 1, got {p.beam_width} (0 would never "
+            "expand a frontier and the lock-step loop could not terminate)")
+    return min(p.beam_width, cap)   # can't select more than the buffer holds
+
+
+def adaptive_transition(p: SearchParams, cand_d2: jax.Array, l: jax.Array,
+                        done: jax.Array, saturated: jax.Array,
+                        conv: jax.Array):
+    """Alg.-3 line 11 lock-step transition for window-exhausted queries.
+
+    Shared by the graph and probing beam engines so the stop rule can never
+    desynchronize between them.  ``conv`` masks the queries taking the
+    transition this iteration; others pass through unchanged.
+    Returns (l, done, saturated).
+    """
+    if not p.adaptive:
+        return l, done | conv, saturated
+    C = cand_d2.shape[1]
+    alpha2 = jnp.float32(p.alpha * p.alpha)
+    # stop iff d(q, C[l]) ≥ α · d(q, C[k])
+    d2_l = jnp.take_along_axis(
+        cand_d2, jnp.minimum(l - 1, C - 1)[:, None], axis=1)[:, 0]
+    d2_k = cand_d2[:, p.k - 1]
+    stop = d2_l >= alpha2 * d2_k
+    at_cap = l >= p.l_max
+    new_l = jnp.minimum(l + p.l_step, p.l_max)
+    return (
+        jnp.where(conv & ~stop, new_l, l),
+        done | (conv & (stop | at_cap)),
+        saturated | (conv & at_cap & ~stop),
+    )
+
+
+def _beam_search_batch(
+    graph: GraphIndex,
+    queries: jax.Array,        # f32[B, d]
+    start: jax.Array,          # int32[B]
+    p: SearchParams,
+    batch_dist: Callable,
+) -> _BeamState:
+    B = queries.shape[0]
+    C = p.l_max + 1
+    W = resolve_beam_width(p, C)
+    M = graph.neighbors.shape[1]
+    n = graph.n
+
+    pos = jnp.arange(C, dtype=jnp.int32)[None, :]      # [1, C]
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]     # [B, 1]
+
+    d2_start = batch_dist(queries, start[:, None])[:, 0]
+    st = _BeamState(
+        cand_ids=jnp.full((B, C), INVALID_ID, jnp.int32).at[:, 0].set(start),
+        cand_d2=jnp.full((B, C), jnp.inf, jnp.float32).at[:, 0].set(d2_start),
+        cand_vis=jnp.zeros((B, C), jnp.bool_),
+        seen=bitset_set(bitset_make(B, n), start[:, None]),
+        l=jnp.full((B,), min(max(p.l0, p.k), p.l_max), jnp.int32),
+        n_dist=jnp.ones((B,), jnp.int32),
+        n_hops=jnp.zeros((B,), jnp.int32),
+        done=jnp.zeros((B,), jnp.bool_),
+        saturated=jnp.zeros((B,), jnp.bool_),
+    )
+
+    def active_mask(s: _BeamState):
+        return (~s.done) & (s.n_hops < p.max_hops)
+
+    def cond(s: _BeamState):
+        return jnp.any(active_mask(s))
+
+    def body(s: _BeamState) -> _BeamState:
+        active = active_mask(s)
+        window = (pos < s.l[:, None]) & (s.cand_ids >= 0) & (~s.cand_vis)
+        window &= active[:, None]
+        has_frontier = jnp.any(window, axis=1)
+
+        # -- frontier selection: W best unvisited in-window per query --------
+        sel, selv = select_top_w(s.cand_d2, window, W)
+        selv &= (active & has_frontier)[:, None]
+        vis_sel = jnp.take_along_axis(s.cand_vis, sel, axis=1) | selv
+        cand_vis = s.cand_vis.at[rows, sel].set(vis_sel)
+        u_ids = jnp.where(
+            selv, jnp.take_along_axis(s.cand_ids, sel, axis=1), INVALID_ID)
+
+        # -- neighbor gather + bitset dedup ---------------------------------
+        nbrs = jnp.take(graph.neighbors, jnp.maximum(u_ids, 0), axis=0)
+        nbrs = jnp.where(selv[:, :, None], nbrs, INVALID_ID).reshape(B, W * M)
+        fresh = (nbrs >= 0) & ~bitset_test(s.seen, nbrs)
+        new_ids = unique_per_row(nbrs, fresh)                  # [B, W·M]
+        seen = bitset_set(s.seen, new_ids)
+
+        # -- the hot path: one fused gather+L2 over the whole batch ----------
+        d2_new = batch_dist(queries, new_ids)
+        n_evals = jnp.sum(new_ids >= 0, axis=1).astype(jnp.int32)
+        n_dist = s.n_dist + n_evals
+        n_hops = s.n_hops + jnp.sum(selv, axis=1).astype(jnp.int32)
+
+        cand_ids, cand_d2, cand_vis = batch_merge_topc(
+            s.cand_ids, s.cand_d2, cand_vis,
+            new_ids, d2_new, jnp.zeros_like(fresh), C)
+
+        # -- adaptive transition for window-exhausted queries ----------------
+        conv = active & ~has_frontier
+        l, done, saturated = adaptive_transition(
+            p, cand_d2, s.l, s.done, s.saturated, conv)
+
+        return _BeamState(cand_ids=cand_ids, cand_d2=cand_d2,
+                          cand_vis=cand_vis, seen=seen, l=l, n_dist=n_dist,
+                          n_hops=n_hops, done=done, saturated=saturated)
+
+    return jax.lax.while_loop(cond, body, st)
+
+
+@partial(jax.jit, static_argnames=("params", "faithful_prune",
+                                   "with_candidates", "backend"))
+def search(
+    graph: GraphIndex,
+    queries: jax.Array,                 # f32[B, d]
+    params: SearchParams,
+    start: Optional[jax.Array] = None,  # int32[B] or None → medoid
+    faithful_prune: bool = False,
+    with_candidates: bool = False,
+    backend: str = "auto",
+):
+    """Batched Alg. 1 / Alg. 3 search on the lock-step beam engine.
+
+    Returns SearchResult (and optionally the final candidate buffers for
+    local-optimum analysis).  ``params.beam_width`` sets the per-hop frontier
+    width W; W=1 reproduces the legacy per-query engine node-for-node.
+
+    ``faithful_prune=True`` (the literal Alg.-3 top-(l+1) prune) delegates to
+    the legacy engine: literal pruning relies on *re-inserting* previously
+    pruned nodes once ``l`` grows, which the seen-bitset intentionally
+    forbids (a pruned node can never re-enter the full-capacity buffer, so
+    the default mode needs no re-insertion — the literal variant does).
+    The delegation refuses non-default ``beam_width``/``backend`` rather
+    than silently running a different engine configuration.
+    """
+    if faithful_prune:
+        if params.beam_width != 1 or backend != "auto":
+            raise ValueError(
+                "faithful_prune=True runs on the legacy per-query engine, "
+                "which supports neither beam_width>1 nor a distance backend "
+                f"(got beam_width={params.beam_width}, backend={backend!r})")
+        return legacy_search(graph, queries, params, start=start,
+                             faithful_prune=True,
+                             with_candidates=with_candidates)
+    B = queries.shape[0]
+    if start is None:
+        start = jnp.broadcast_to(graph.medoid, (B,)).astype(jnp.int32)
+    batch_dist = make_batch_dist_fn(graph.vectors, backend)
+    st = _beam_search_batch(graph, queries, start, params, batch_dist)
+    k = params.k
+    res = SearchResult(
+        ids=st.cand_ids[:, :k],
+        dists=jnp.sqrt(jnp.maximum(st.cand_d2[:, :k], 0.0)),
+        n_dist_comps=st.n_dist,
+        n_approx_comps=jnp.zeros_like(st.n_dist),
+        n_hops=st.n_hops,
+        final_l=st.l,
+        saturated=st.saturated,
+    )
+    if with_candidates:
+        return res, st.cand_ids, jnp.sqrt(jnp.maximum(st.cand_d2, 0.0))
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Legacy per-query engine (parity oracle — see module docstring).
+# ---------------------------------------------------------------------------
 
 
 class _State(NamedTuple):
@@ -60,27 +355,6 @@ class _State(NamedTuple):
     saturated: jax.Array   # bool     l hit l_max before the α-rule fired
 
 
-def make_exact_dist_fn(vectors: jax.Array) -> Callable:
-    """dist_fn(q, ids) → squared distances f32[M] (invalid ids → +inf)."""
-
-    def dist_fn(q, ids):
-        rows = take_rows(vectors, ids)
-        diff = rows.astype(jnp.float32) - q.astype(jnp.float32)[None, :]
-        d2 = jnp.sum(diff * diff, axis=-1)
-        return jnp.where(ids >= 0, d2, jnp.inf)
-
-    return dist_fn
-
-
-def _merge_topc(ids_a, d2_a, vis_a, ids_b, d2_b, vis_b, cap: int):
-    """Merge two (id, d2, visited) lists, keep the ``cap`` smallest by d2."""
-    ids = jnp.concatenate([ids_a, ids_b])
-    d2 = jnp.concatenate([d2_a, d2_b])
-    vis = jnp.concatenate([vis_a, vis_b])
-    neg, idx = jax.lax.top_k(-d2, cap)
-    return ids[idx], -neg, vis[idx]
-
-
 def _search_one(
     neighbors: jax.Array,       # int32[n, M]
     dist_fn: Callable,
@@ -90,7 +364,6 @@ def _search_one(
     faithful_prune: bool,
 ) -> tuple[_State, jax.Array]:
     C = p.l_max + 1
-    M = neighbors.shape[1]
     T = p.max_hops
 
     d2_start = dist_fn(q, start[None])[0]
@@ -175,7 +448,7 @@ def _search_one(
 
 
 @partial(jax.jit, static_argnames=("params", "faithful_prune", "with_candidates"))
-def search(
+def legacy_search(
     graph: GraphIndex,
     queries: jax.Array,                 # f32[B, d]
     params: SearchParams,
@@ -183,8 +456,8 @@ def search(
     faithful_prune: bool = False,
     with_candidates: bool = False,
 ):
-    """Batched Alg. 1 / Alg. 3 search.  Returns SearchResult (and optionally
-    the final candidate buffers for local-optimum analysis)."""
+    """Seed per-query Alg. 1 / Alg. 3 engine (one node per hop, ring-buffer
+    visited set).  Parity oracle for the beam engine; not on any hot path."""
     B = queries.shape[0]
     if start is None:
         start = jnp.broadcast_to(graph.medoid, (B,)).astype(jnp.int32)
@@ -211,19 +484,22 @@ def search(
 
 
 def greedy_search(graph: GraphIndex, queries: jax.Array, k: int, l: int,
-                  start: Optional[jax.Array] = None, max_hops: int = 512) -> SearchResult:
+                  start: Optional[jax.Array] = None, max_hops: int = 512,
+                  beam_width: int = 1, backend: str = "auto") -> SearchResult:
     """Algorithm 1 with fixed candidate width l (the ablation δ-EMG-GS)."""
-    p = SearchParams(k=k, l0=l, l_max=l, adaptive=False, max_hops=max_hops)
-    return search(graph, queries, p, start=start)
+    p = SearchParams(k=k, l0=l, l_max=l, adaptive=False, max_hops=max_hops,
+                     beam_width=beam_width)
+    return search(graph, queries, p, start=start, backend=backend)
 
 
 def error_bounded_search(graph: GraphIndex, queries: jax.Array, k: int,
                          alpha: float, l_max: int = 256, l_step: int = 1,
                          start: Optional[jax.Array] = None,
-                         max_hops: int = 2048, **kw) -> SearchResult:
+                         max_hops: int = 2048, beam_width: int = 1,
+                         **kw) -> SearchResult:
     """Algorithm 3: adaptive candidate width with the α stop rule."""
     p = SearchParams(k=k, l0=k, l_max=l_max, l_step=l_step, alpha=alpha,
-                     adaptive=True, max_hops=max_hops)
+                     adaptive=True, max_hops=max_hops, beam_width=beam_width)
     return search(graph, queries, p, start=start, **kw)
 
 

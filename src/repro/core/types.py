@@ -160,6 +160,7 @@ class SearchParams:
     adaptive: bool = static_field(default=False)  # False → Alg. 1, True → Alg. 3
     max_hops: int = static_field(default=512)   # hard iteration cap (also T ring size)
     rerank: bool = static_field(default=True)   # δ-EMQG: exact rerank of results
+    beam_width: int = static_field(default=1)   # frontier nodes expanded per hop (W)
 
 
 def take_rows(mat: jax.Array, ids: jax.Array) -> jax.Array:

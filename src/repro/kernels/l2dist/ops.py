@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .l2dist import batched_l2_pallas, gather_l2_pallas
+from .l2dist import batched_l2_pallas, gather_l2_pallas, gather_l2_tiled_pallas
 
 _LANE = 128
 
@@ -55,4 +55,30 @@ def gather_l2(base: jax.Array, ids: jax.Array, queries: jax.Array,
         interp = _on_cpu() if interpret is None else interpret
         d2 = gather_l2_pallas(_pad_lane(base, 1), safe, _pad_lane(queries, 1),
                               interpret=interp)
+    return jnp.where(ids >= 0, d2, jnp.inf)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "use_ref", "interpret"))
+def gather_l2_tiled(base: jax.Array, ids: jax.Array, queries: jax.Array,
+                    block_rows: int = 8, use_ref: bool = False,
+                    interpret: bool | None = None) -> jax.Array:
+    """Tiled fused gather+L2: ``block_rows`` row DMAs per grid step.
+
+    Same contract as :func:`gather_l2`; M is padded up to a multiple of
+    ``block_rows`` internally (pad rows index row 0 and are masked out).
+    """
+    B, M = ids.shape
+    safe = jnp.maximum(ids, 0)
+    if use_ref:
+        d2 = ref.gather_l2_ref(base, safe, queries)
+    else:
+        interp = _on_cpu() if interpret is None else interpret
+        pad = (-M) % block_rows
+        if pad:
+            safe = jnp.pad(safe, ((0, 0), (0, pad)))
+        d2 = gather_l2_tiled_pallas(_pad_lane(base, 1), safe,
+                                    _pad_lane(queries, 1),
+                                    block_rows=block_rows, interpret=interp)
+        d2 = d2[:, :M]
     return jnp.where(ids >= 0, d2, jnp.inf)

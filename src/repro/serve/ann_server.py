@@ -7,6 +7,14 @@ and per-request results are fanned back out.  Straggler mitigation falls out
 of the lock-step formulation — a hard query costs masked iterations instead
 of blocking a core.
 
+The server runs the batch-level beam engine: ``params.beam_width`` widens
+the per-hop frontier (fewer, fatter lock-step iterations per batch — the
+QPS/latency knob), and ``backend`` selects the fused gather+L2
+implementation for the distance hot path ("auto" picks the tiled Pallas
+kernel on TPU, plain XLA elsewhere).  ``engine="legacy"`` keeps the seed
+per-query engine reachable for A/B traffic splits while the parity suite
+soaks.
+
 Single-process implementation (threads would add nothing in a test
 container); the ``submit_many`` / ``drain`` pair models the arrival loop so
 benchmarks can replay request traces with arrival timestamps.
@@ -25,6 +33,8 @@ from repro.core import (
     EMQGIndex,
     GraphIndex,
     SearchParams,
+    legacy_probing_search,
+    legacy_search,
     probing_search,
     search,
 )
@@ -49,15 +59,31 @@ class ServeStats:
 
 class AnnServer:
     def __init__(self, index: GraphIndex | EMQGIndex, params: SearchParams,
-                 max_batch: int = 64, buckets: tuple[int, ...] = (8, 32, 64)):
+                 max_batch: int = 64, buckets: tuple[int, ...] = (8, 32, 64),
+                 engine: str = "beam", backend: str = "auto"):
+        if engine not in ("beam", "legacy"):
+            raise ValueError(f"unknown engine: {engine!r}")
         self.index = index
         self.params = params
         self.max_batch = max_batch
         self.buckets = tuple(sorted(set(b for b in buckets if b <= max_batch))) \
             or (max_batch,)
         self.quantized = isinstance(index, EMQGIndex)
+        self.engine = engine
+        self.backend = backend
         self._queue: list[tuple[float, np.ndarray]] = []
         self.stats = ServeStats()
+
+    def _search(self, queries: jnp.ndarray):
+        if self.quantized:
+            if self.engine == "beam":
+                return probing_search(self.index, queries, self.params,
+                                      backend=self.backend)
+            return legacy_probing_search(self.index, queries, self.params)
+        if self.engine == "beam":
+            return search(self.index, queries, self.params,
+                          backend=self.backend)
+        return legacy_search(self.index, queries, self.params)
 
     # -- request path -------------------------------------------------------
     def submit(self, query: np.ndarray, arrival_t: Optional[float] = None):
@@ -88,10 +114,7 @@ class AnnServer:
             if pad:
                 qs = np.concatenate([qs, np.repeat(qs[-1:], pad, axis=0)])
             t0 = time.time()
-            if self.quantized:
-                res = probing_search(self.index, jnp.asarray(qs), self.params)
-            else:
-                res = search(self.index, jnp.asarray(qs), self.params)
+            res = self._search(jnp.asarray(qs))
             ids = np.asarray(res.ids)
             dists = np.asarray(res.dists)
             t1 = time.time()

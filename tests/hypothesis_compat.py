@@ -1,0 +1,49 @@
+"""Optional-dependency guard for hypothesis.
+
+``hypothesis`` is declared as a test extra in pyproject.toml, but the suite
+must degrade gracefully when it is absent (the paper-repro container bakes a
+fixed environment): importing this module instead of ``hypothesis`` directly
+turns every ``@given`` property test into a pytest skip rather than killing
+collection of the whole module — non-property tests in the same file keep
+running.
+
+Usage (replaces ``from hypothesis import given, settings, strategies as st``):
+
+    from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+"""
+
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed (optional test dependency)"
+            )(fn)
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _StrategyStub:
+        """Accepts any strategy construction; never executed (tests skip)."""
+
+        def __getattr__(self, name):
+            def strategy(*_args, **_kwargs):
+                return None
+
+            return strategy
+
+    st = _StrategyStub()

@@ -1,0 +1,288 @@
+"""Beam-engine parity vs the legacy per-query engines, plus unit tests for
+the packed visited bitset and the tiled gather+L2 kernel.
+
+Parity contract: at ``beam_width=1`` the batch-level lock-step engine expands
+nodes in the identical order to the seed per-query engine and must return
+*identical* top-k ids and distances in every mode (fixed-l greedy, adaptive-α,
+probing).  At ``beam_width>1`` the expansion schedule is reordered (W nodes
+per hop), which monotonic-graph convergence tolerates — results may differ on
+individual queries, so the suite asserts recall parity instead.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BuildParams,
+    SearchParams,
+    build_approx,
+    build_emqg,
+    legacy_probing_search,
+    legacy_search,
+    probing_search,
+    search,
+)
+from repro.core.bitset import (
+    bitset_make,
+    bitset_set,
+    bitset_test,
+    bitset_words,
+    unique_per_row,
+)
+from repro.kernels.l2dist import ref as l2ref
+from repro.kernels.l2dist.ops import gather_l2_tiled
+
+from conftest import recall_at_k
+
+
+@pytest.fixture(scope="module")
+def graph(small_corpus):
+    p = BuildParams(max_degree=24, beam_width=48, t=24, iters=3, block=512)
+    return build_approx(small_corpus["base"], p)
+
+
+@pytest.fixture(scope="module")
+def emqg(small_corpus):
+    p = BuildParams(max_degree=24, beam_width=48, t=24, iters=2, block=512,
+                    align_degree=True)
+    return build_emqg(small_corpus["base"], p)
+
+
+def _params(mode: str, beam_width: int) -> SearchParams:
+    if mode == "fixed":
+        return SearchParams(k=10, l0=48, l_max=48, adaptive=False,
+                            max_hops=512, beam_width=beam_width)
+    assert mode == "adaptive"
+    return SearchParams(k=10, l0=10, l_max=96, alpha=1.5, adaptive=True,
+                        max_hops=2048, beam_width=beam_width)
+
+
+# ---------------------------------------------------------------------------
+# Engine parity.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["fixed", "adaptive"])
+def test_graph_parity_w1(graph, small_corpus, mode):
+    q = jnp.asarray(small_corpus["queries"])
+    p = _params(mode, beam_width=1)
+    r_beam = search(graph, q, p)
+    r_legacy = legacy_search(graph, q, p)
+    assert (np.asarray(r_beam.ids) == np.asarray(r_legacy.ids)).all()
+    np.testing.assert_allclose(np.asarray(r_beam.dists),
+                               np.asarray(r_legacy.dists), rtol=1e-6)
+    # identical expansion schedule ⇒ identical hop counts
+    assert (np.asarray(r_beam.n_hops) == np.asarray(r_legacy.n_hops)).all()
+    assert (np.asarray(r_beam.final_l) == np.asarray(r_legacy.final_l)).all()
+
+
+@pytest.mark.parametrize("mode", ["fixed", "adaptive"])
+def test_probing_parity_w1(emqg, small_corpus, mode):
+    q = jnp.asarray(small_corpus["queries"])
+    p = _params(mode, beam_width=1)
+    if mode == "adaptive":
+        p = SearchParams(**{**p.__dict__, "max_hops": 4096})
+    r_beam = probing_search(emqg, q, p)
+    r_legacy = legacy_probing_search(emqg, q, p)
+    assert (np.asarray(r_beam.ids) == np.asarray(r_legacy.ids)).all()
+    np.testing.assert_allclose(np.asarray(r_beam.dists),
+                               np.asarray(r_legacy.dists), rtol=1e-6)
+
+
+@pytest.mark.parametrize("mode", ["fixed", "adaptive"])
+def test_graph_recall_parity_w4(graph, small_corpus, mode):
+    """W=4 reorders expansions; quality must hold even where ids differ."""
+    q = jnp.asarray(small_corpus["queries"])
+    r_beam = search(graph, q, _params(mode, beam_width=4))
+    r_legacy = legacy_search(graph, q, _params(mode, beam_width=1))
+    rec_beam = recall_at_k(r_beam.ids, small_corpus["gt_i"], 10)
+    rec_legacy = recall_at_k(r_legacy.ids, small_corpus["gt_i"], 10)
+    assert rec_beam >= rec_legacy - 0.03
+    # per-query k-th distance can't degrade materially either
+    d_beam = np.asarray(r_beam.dists)[:, -1]
+    d_legacy = np.asarray(r_legacy.dists)[:, -1]
+    assert np.mean(d_beam <= d_legacy * 1.05) > 0.95
+
+
+def test_probing_recall_parity_w4(emqg, small_corpus):
+    q = jnp.asarray(small_corpus["queries"])
+    p4 = SearchParams(k=10, l0=10, l_max=96, alpha=1.5, adaptive=True,
+                      max_hops=4096, beam_width=4)
+    p1 = SearchParams(**{**p4.__dict__, "beam_width": 1})
+    r_beam = probing_search(emqg, q, p4)
+    r_legacy = legacy_probing_search(emqg, q, p1)
+    rec_beam = recall_at_k(r_beam.ids, small_corpus["gt_i"], 10)
+    rec_legacy = recall_at_k(r_legacy.ids, small_corpus["gt_i"], 10)
+    assert rec_beam >= rec_legacy - 0.03
+
+
+def test_beam_fewer_dist_evals(graph, small_corpus):
+    """The bitset dedup strictly dominates the ring buffer: identical results
+    with fewer exact distance evaluations."""
+    q = jnp.asarray(small_corpus["queries"])
+    p = _params("adaptive", beam_width=1)
+    r_beam = search(graph, q, p)
+    r_legacy = legacy_search(graph, q, p)
+    assert (np.asarray(r_beam.ids) == np.asarray(r_legacy.ids)).all()
+    assert (np.asarray(r_beam.n_dist_comps)
+            <= np.asarray(r_legacy.n_dist_comps)).all()
+    assert (np.asarray(r_beam.n_dist_comps).mean()
+            < np.asarray(r_legacy.n_dist_comps).mean())
+
+
+def test_kernel_backends_match_jnp(graph, small_corpus):
+    q = jnp.asarray(small_corpus["queries"][:8])
+    p = SearchParams(k=5, l0=16, l_max=16, adaptive=False, max_hops=64,
+                     beam_width=2)
+    r_jnp = search(graph, q, p, backend="jnp")
+    for backend in ("kernel", "kernel_tiled"):
+        r_k = search(graph, q, p, backend=backend)
+        assert (np.asarray(r_jnp.ids) == np.asarray(r_k.ids)).all(), backend
+        np.testing.assert_allclose(np.asarray(r_jnp.dists),
+                                   np.asarray(r_k.dists), rtol=1e-4,
+                                   atol=1e-4)
+
+
+def test_beam_width_sweep_recall(graph, small_corpus):
+    q = jnp.asarray(small_corpus["queries"])
+    for w in (1, 2, 4, 8):
+        r = search(graph, q, _params("adaptive", beam_width=w))
+        assert recall_at_k(r.ids, small_corpus["gt_i"], 10) > 0.85, w
+
+
+def test_beam_width_zero_rejected(graph, emqg, small_corpus):
+    q = jnp.asarray(small_corpus["queries"][:2])
+    p = SearchParams(k=3, l0=8, l_max=16, beam_width=0)
+    with pytest.raises(ValueError, match="beam_width"):
+        search(graph, q, p)
+    with pytest.raises(ValueError, match="beam_width"):
+        probing_search(emqg, q, p)
+
+
+def test_faithful_prune_rejects_beam_options(graph, small_corpus):
+    """faithful_prune delegates to the legacy engine; non-default beam
+    options must be refused, not silently dropped."""
+    q = jnp.asarray(small_corpus["queries"][:2])
+    p = SearchParams(k=3, l0=8, l_max=16, beam_width=4)
+    with pytest.raises(ValueError, match="faithful_prune"):
+        search(graph, q, p, faithful_prune=True)
+    p1 = SearchParams(k=3, l0=8, l_max=16)
+    with pytest.raises(ValueError, match="faithful_prune"):
+        search(graph, q, p1, faithful_prune=True, backend="jnp")
+
+
+def test_beam_width_clamped_to_buffer(graph, small_corpus):
+    """W larger than the candidate buffer must clamp, not crash."""
+    q = jnp.asarray(small_corpus["queries"][:2])
+    wide = SearchParams(k=3, l0=4, l_max=4, beam_width=64)
+    narrow = SearchParams(k=3, l0=4, l_max=4, beam_width=5)  # == l_max+1
+    r_wide = search(graph, q, wide)
+    r_narrow = search(graph, q, narrow)
+    assert (np.asarray(r_wide.ids) == np.asarray(r_narrow.ids)).all()
+
+
+# ---------------------------------------------------------------------------
+# Visited bitset.
+# ---------------------------------------------------------------------------
+
+def test_bitset_basic():
+    bits = bitset_make(2, 100)
+    assert bits.shape == (2, bitset_words(100))
+    ids = jnp.asarray([[0, 31, 32, 99], [5, 64, -1, 5]], jnp.int32)
+    # duplicate 5 in row 1 → dedup before set (the engine invariant)
+    uniq = unique_per_row(ids, ids >= 0)
+    bits = bitset_set(bits, uniq)
+    probe = jnp.asarray([[0, 31, 32, 99, 1, 33], [5, 64, 0, 6, 99, -1]],
+                        jnp.int32)
+    got = np.asarray(bitset_test(bits, probe))
+    assert got.tolist() == [[True, True, True, True, False, False],
+                            [True, True, False, False, False, False]]
+
+
+def test_bitset_invalid_ids_noop():
+    bits = bitset_make(1, 64)
+    bits2 = bitset_set(bits, jnp.asarray([[-1, -1]], jnp.int32))
+    assert (np.asarray(bits2) == 0).all()
+    assert not np.asarray(
+        bitset_test(bits2, jnp.asarray([[-1]], jnp.int32)))[0, 0]
+
+
+def test_bitset_randomized_vs_python_set():
+    rng = np.random.default_rng(0)
+    n, rounds = 257, 6
+    bits = bitset_make(1, n)
+    seen = set()
+    for _ in range(rounds):
+        batch = rng.integers(0, n, size=(1, 16)).astype(np.int32)
+        fresh_np = np.asarray(
+            [[int(v) not in seen for v in batch[0]]])
+        got = ~np.asarray(bitset_test(bits, jnp.asarray(batch)))
+        assert (got == fresh_np).all()
+        uniq = unique_per_row(jnp.asarray(batch), jnp.asarray(fresh_np))
+        bits = bitset_set(bits, uniq)
+        seen.update(int(v) for v in batch[0])
+
+
+def test_unique_per_row():
+    ids = jnp.asarray([[7, 3, 7, 3, 9, -1], [1, 1, 1, 1, 1, 1]], jnp.int32)
+    fresh = ids >= 0
+    out = np.asarray(unique_per_row(ids, fresh))
+    assert sorted(v for v in out[0] if v >= 0) == [3, 7, 9]
+    assert sorted(v for v in out[1] if v >= 0) == [1]
+    # valid prefix is sorted ascending, invalid tail is -1
+    row = out[0]
+    valid = row[row >= 0]
+    assert (np.diff(valid) > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Tiled gather kernel.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,M,d,R", [(2, 16, 24, 8), (4, 30, 128, 8),
+                                     (1, 7, 65, 4), (3, 24, 33, 8)])
+def test_gather_l2_tiled_vs_ref(B, M, d, R):
+    rng = np.random.default_rng(B * 100 + M + d)
+    n = 200
+    base = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    ids = rng.integers(0, n, (B, M)).astype(np.int32)
+    ids[0, 0] = -1                      # INVALID handling
+    ids = jnp.asarray(ids)
+    qs = jnp.asarray(rng.normal(size=(B, d)).astype(np.float32))
+    out = np.asarray(gather_l2_tiled(base, ids, qs, block_rows=R))
+    expect = np.asarray(l2ref.gather_l2_ref(base, jnp.maximum(ids, 0), qs))
+    assert np.isinf(out[0, 0])
+    mask = np.asarray(ids) >= 0
+    np.testing.assert_allclose(out[mask], expect[mask], rtol=1e-4, atol=1e-3)
+
+
+def test_gather_l2_tiled_matches_single_row():
+    from repro.kernels.l2dist.ops import gather_l2
+
+    rng = np.random.default_rng(11)
+    base = jnp.asarray(rng.normal(size=(64, 48)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 64, (4, 24)).astype(np.int32))
+    qs = jnp.asarray(rng.normal(size=(4, 48)).astype(np.float32))
+    a = np.asarray(gather_l2(base, ids, qs))
+    b = np.asarray(gather_l2_tiled(base, ids, qs))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Serving layer A/B.
+# ---------------------------------------------------------------------------
+
+def test_server_engines_agree(graph, small_corpus):
+    from repro.serve.ann_server import AnnServer
+
+    params = SearchParams(k=10, l0=10, l_max=64, alpha=1.5, adaptive=True,
+                          max_hops=1024, beam_width=1)
+    out = {}
+    for engine in ("beam", "legacy"):
+        srv = AnnServer(graph, params, max_batch=32, buckets=(8, 32),
+                        engine=engine)
+        srv.submit_many(small_corpus["queries"][:20])
+        out[engine] = srv.drain()
+    for (ids_b, d_b), (ids_l, d_l) in zip(out["beam"], out["legacy"]):
+        assert (ids_b == ids_l).all()
+        np.testing.assert_allclose(d_b, d_l, rtol=1e-6)

@@ -3,7 +3,11 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional test dependency; every test here is a property test")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import geometry
 
