@@ -1,1 +1,7 @@
-from .manager import CheckpointManager, restore_latest, save_checkpoint  # noqa: F401
+from .manager import (  # noqa: F401
+    CheckpointCorruptError,
+    CheckpointManager,
+    list_steps,
+    restore_latest,
+    save_checkpoint,
+)

@@ -1,16 +1,25 @@
 """Fault-tolerant checkpointing: atomic, manifest-committed, keep-K,
-async-capable, reshard-on-restore.
+async-capable, checksum-verified, reshard-on-restore.
 
 Layout (one directory per step):
     <dir>/step_000123.tmp/...    (write)
     <dir>/step_000123/           (os.replace — atomic commit)
-        manifest.json            {step, n_arrays, keys, dtypes, shapes}
+        manifest.json            {step, n_arrays, keys, dtypes, shapes,
+                                  checksums}
         arrays.npz               flattened pytree, path-keyed
 
 Crash safety: a checkpoint is valid iff the non-``.tmp`` directory exists
 with a readable manifest — a process killed mid-save leaves only ``.tmp``
-junk that the next save cleans up.  ``restore_latest`` walks steps downward
-until it finds a valid one (tolerates a torn final checkpoint).
+junk that the next save cleans up.
+
+Integrity: the manifest records a CRC32 per array (computed from the raw
+host bytes at save time).  ``restore_latest`` re-hashes every array on load
+and treats any mismatch — like an unreadable archive, a torn manifest, or a
+key-set mismatch against the restore template — as "this step is corrupt":
+it logs a warning and **walks back to the next-older step** instead of
+raising.  A bit-flipped ``arrays.npz`` therefore costs one checkpoint
+interval of progress, never the process.  (Pre-checksum checkpoints restore
+fine: verification is skipped when the manifest has no ``checksums`` entry.)
 
 Resharding: arrays are saved host-resident (fully replicated view); on
 restore the caller passes target shardings (or a template pytree of jax
@@ -22,16 +31,24 @@ world resize, DESIGN.md §6).
 from __future__ import annotations
 
 import json
+import logging
 import os
 import re
 import shutil
 import threading
+import zlib
 from typing import Any, Optional
 
 import jax
 import numpy as np
 
 _STEP_RE = re.compile(r"^step_(\d{9})$")
+
+log = logging.getLogger("repro.checkpoint")
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A single step failed integrity checks (caught by the walk-back)."""
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -40,6 +57,10 @@ def _flatten(tree) -> dict[str, np.ndarray]:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
         flat[key] = np.asarray(jax.device_get(leaf))
     return flat
+
+
+def _checksum(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
 
 
 def save_checkpoint(directory: str, step: int, tree, keep: int = 3) -> str:
@@ -58,6 +79,7 @@ def save_checkpoint(directory: str, step: int, tree, keep: int = 3) -> str:
         "keys": sorted(flat.keys()),
         "dtypes": {k: str(v.dtype) for k, v in flat.items()},
         "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "checksums": {k: _checksum(v) for k, v in flat.items()},
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
@@ -92,28 +114,62 @@ def list_steps(directory: str) -> list[int]:
     return sorted(out)
 
 
-def restore_latest(directory: str, template, shardings=None
+def _load_verified(path: str, verify: bool) -> dict[str, np.ndarray]:
+    """Load one step's arrays, checked against its manifest.  Raises
+    ``CheckpointCorruptError`` on any integrity violation."""
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+    except Exception as e:
+        raise CheckpointCorruptError(f"unreadable manifest: {e}") from e
+    try:
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+    except Exception as e:
+        raise CheckpointCorruptError(f"unreadable arrays.npz: {e}") from e
+    keys = manifest.get("keys")
+    if keys is not None and set(keys) != set(flat.keys()):
+        raise CheckpointCorruptError(
+            f"manifest/arrays key mismatch: {set(keys) ^ set(flat.keys())}")
+    checksums = manifest.get("checksums")
+    if verify and checksums:
+        for k, arr in flat.items():
+            expect = checksums.get(k)
+            got = _checksum(arr)
+            if expect is not None and got != expect:
+                raise CheckpointCorruptError(
+                    f"checksum mismatch for {k!r}: "
+                    f"manifest {expect:#010x} != data {got:#010x}")
+    return flat
+
+
+def restore_latest(directory: str, template, shardings=None, verify: bool = True
                    ) -> tuple[Optional[int], Any]:
-    """Restore the newest valid checkpoint into the template's structure.
+    """Restore the newest checkpoint that passes integrity checks into the
+    template's structure.  Invalid steps (unreadable, checksum-mismatched,
+    or key-set-mismatched vs the template) are logged and skipped — the walk
+    continues to the next-older step, and ``(None, template)`` is returned
+    only when nothing valid remains.
+
     ``shardings``: optional pytree (same structure) of jax.sharding.Sharding
     for reshard-on-load; defaults to the template leaves' shardings when the
-    template holds jax arrays."""
+    template holds jax arrays.  ``verify=False`` skips checksum re-hashing
+    (trusted local disk, restore-latency-sensitive callers)."""
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(template)
+    keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_)
+            for path_, _ in leaves_p]
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(keys))
     for step in reversed(list_steps(directory)):
         path = os.path.join(directory, f"step_{step:09d}")
         try:
-            with np.load(os.path.join(path, "arrays.npz")) as z:
-                flat = {k: z[k] for k in z.files}
-        except Exception:
+            flat = _load_verified(path, verify)
+            if set(keys) != set(flat.keys()):
+                raise CheckpointCorruptError(
+                    f"template structure mismatch: {set(keys) ^ set(flat.keys())}")
+        except Exception as e:
+            log.warning("skipping checkpoint %s (%s); walking back", path, e)
             continue
-        leaves_p, treedef = jax.tree_util.tree_flatten_with_path(template)
-        keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_)
-                for path_, _ in leaves_p]
-        if set(keys) != set(flat.keys()):
-            raise ValueError(
-                f"checkpoint {path} structure mismatch: "
-                f"{set(keys) ^ set(flat.keys())}")
-        shard_leaves = (jax.tree_util.tree_leaves(shardings)
-                        if shardings is not None else [None] * len(keys))
         new_leaves = []
         for (pth, tmpl), key, shd in zip(leaves_p, keys, shard_leaves):
             arr = flat[key].astype(tmpl.dtype) if hasattr(tmpl, "dtype") else flat[key]
@@ -155,5 +211,5 @@ class CheckpointManager:
             self._thread.join()
             self._thread = None
 
-    def restore(self, template, shardings=None):
-        return restore_latest(self.directory, template, shardings)
+    def restore(self, template, shardings=None, verify: bool = True):
+        return restore_latest(self.directory, template, shardings, verify)

@@ -4,6 +4,12 @@ query stream through the batched request loop.
     PYTHONPATH=src python -m repro.launch.serve --n 4000 --dim 48 \
         --queries 512 --alpha 1.2 --k 10
 
+``--resilient`` runs the same stream through the resilience layer
+(admission control, per-request deadlines, error-bounded degradation
+ladder, circuit-breaker fallback — see ``repro.serve.resilience``) and
+reports the resilience counters plus the worst δ error bound any response
+was served under.
+
 At production scale the same loop drives ``core.distributed``'s sharded
 index across the mesh (see examples/vector_serve.py for the multi-shard
 CPU demonstration)."""
@@ -11,15 +17,15 @@ CPU demonstration)."""
 from __future__ import annotations
 
 import argparse
+import math
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import BuildParams, SearchParams, build_emqg
 from repro.core.distances import brute_force_knn
 from repro.data import clustered_vectors
-from repro.serve import AnnServer
+from repro.serve import AnnServer, ResilienceConfig, ResilientAnnServer
 
 
 def main(argv=None) -> int:
@@ -31,23 +37,67 @@ def main(argv=None) -> int:
     ap.add_argument("--alpha", type=float, default=1.2)
     ap.add_argument("--max-degree", type=int, default=24)
     ap.add_argument("--beam", type=int, default=64)
+    ap.add_argument("--delta", type=float, default=None,
+                    help="fixed construction δ (default: adaptive δ_t rule; "
+                         "a fixed δ makes the reported error bounds finite)")
+    ap.add_argument("--resilient", action="store_true",
+                    help="serve through the resilience layer")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline (resilient mode)")
+    ap.add_argument("--max-queue", type=int, default=4096,
+                    help="admission-control queue cap (resilient mode)")
+    ap.add_argument("--degrade-at", type=int, default=64,
+                    help="queue depth that steps the ladder down one rung")
+    ap.add_argument("--recover-at", type=int, default=8,
+                    help="queue depth that steps the ladder back up")
+    ap.add_argument("--rungs", type=int, default=4,
+                    help="degradation-ladder depth (resilient mode)")
     args = ap.parse_args(argv)
 
     print(f"[serve] building δ-EMQG over n={args.n} d={args.dim} …")
     base = clustered_vectors(args.n, args.dim, 48, seed=0)
     t0 = time.time()
     idx = build_emqg(base, BuildParams(
-        max_degree=args.max_degree, beam_width=args.beam,
+        max_degree=args.max_degree, beam_width=args.beam, delta=args.delta,
         t=args.beam // 2, iters=2, block=1024, align_degree=True))
     print(f"[serve] built in {time.time() - t0:.1f}s "
           f"(mean degree {float(np.asarray(idx.graph.degrees()).mean()):.1f})")
 
     queries = clustered_vectors(args.queries, args.dim, 48, seed=1)
     gt_d, gt_i = brute_force_knn(queries, base, args.k)
-    srv = AnnServer(idx, SearchParams(k=args.k, l0=args.k, l_max=256,
-                                      alpha=args.alpha, adaptive=True,
-                                      max_hops=2048),
-                    max_batch=128, buckets=(32, 128))
+    params = SearchParams(k=args.k, l0=args.k, l_max=256, alpha=args.alpha,
+                          adaptive=True, max_hops=2048)
+    if args.resilient:
+        cfg = ResilienceConfig(
+            max_queue=args.max_queue,
+            deadline_s=None if args.deadline_ms is None
+            else args.deadline_ms / 1e3,
+            degrade_depth=args.degrade_at, recover_depth=args.recover_at,
+            n_rungs=args.rungs)
+        srv = ResilientAnnServer(idx, params, config=cfg,
+                                 max_batch=128, buckets=(32, 128))
+        srv.submit_many(queries)
+        responses = srv.drain()
+        served = [(i, r) for i, r in enumerate(responses) if r.ok]
+        ids = np.stack([r.ids for _, r in served]) if served else np.zeros((0, args.k))
+        rec = np.mean([
+            len(set(ids[j].tolist()) & set(gt_i[i].tolist())) / args.k
+            for j, (i, _) in enumerate(served)]) if served else 0.0
+        bounds = [r.delta_bound for _, r in served]
+        worst = max(bounds) if bounds else math.inf
+        s = srv.stats
+        print(f"[serve] {s.n_requests} served / {len(responses)} submitted "
+              f"in {s.n_batches} batches; recall@{args.k}={rec:.4f}; "
+              f"QPS={s.qps:.1f} (CPU proxy); "
+              f"p_max_latency={s.max_latency_s * 1e3:.1f} ms")
+        print(f"[serve] resilience: shed={s.n_shed} rejected={s.n_rejected} "
+              f"degraded={s.n_degraded} retried={s.n_retried} "
+              f"fallback={s.n_fallback} deadline_missed={s.n_deadline_missed} "
+              f"failed={s.n_failed}; worst δ bound="
+              f"{worst if math.isfinite(worst) else 'unbounded (δ unknown)'}")
+        return 0
+
+    srv = AnnServer(idx, params, max_batch=128, buckets=(32, 128))
     srv.submit_many(queries)
     results = srv.drain()
     ids = np.stack([r[0] for r in results])

@@ -1,2 +1,10 @@
 from .ann_server import AnnServer, ServeStats  # noqa: F401
 from .lm_server import generate  # noqa: F401
+from .resilience import (  # noqa: F401
+    CircuitBreaker,
+    DegradationLadder,
+    ResilienceConfig,
+    ResilientAnnServer,
+    Response,
+    validate_query,
+)

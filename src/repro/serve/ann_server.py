@@ -13,7 +13,16 @@ QPS/latency knob), and ``backend`` selects the fused gather+L2
 implementation for the distance hot path ("auto" picks the tiled Pallas
 kernel on TPU, plain XLA elsewhere).  ``engine="legacy"`` keeps the seed
 per-query engine reachable for A/B traffic splits while the parity suite
-soaks.
+soaks — and doubles as the circuit-breaker fallback tier of the resilience
+layer (``resilience.py``), which wraps this server with admission control,
+deadlines, and an error-bounded degradation ladder.
+
+Clocks: every request records two timestamps — ``arrival_t``, the *logical*
+arrival time (caller-supplied when replaying a trace, else wall clock), and
+``wall_t``, the wall-clock submit time.  Latency accounting uses the wall
+clock on both ends (submit → completion); logical arrivals only order the
+replay.  Mixing the two (synthetic arrival minus wall-clock completion)
+produced nonsense latencies — don't reintroduce it.
 
 Single-process implementation (threads would add nothing in a test
 container); the ``submit_many`` / ``drain`` pair models the arrival loop so
@@ -42,11 +51,22 @@ from repro.core import (
 
 @dataclasses.dataclass
 class ServeStats:
+    """Serve-loop counters.  The resilience counters (``n_shed`` onward) stay
+    zero under the plain ``AnnServer``; ``ResilientAnnServer`` drives them."""
+
     n_requests: int = 0
     n_batches: int = 0
     total_latency_s: float = 0.0
     max_latency_s: float = 0.0
     total_search_s: float = 0.0
+    # -- resilience counters -------------------------------------------------
+    n_rejected: int = 0          # failed per-request validation (shape/NaN/…)
+    n_shed: int = 0              # refused by admission control (queue full)
+    n_degraded: int = 0          # served at a ladder rung below full quality
+    n_retried: int = 0           # search attempts retried after a fault
+    n_fallback: int = 0          # circuit-breaker tier switches
+    n_deadline_missed: int = 0   # completed after their deadline
+    n_failed: int = 0            # exhausted every tier/retry; error response
 
     @property
     def mean_latency_s(self) -> float:
@@ -55,6 +75,16 @@ class ServeStats:
     @property
     def qps(self) -> float:
         return self.n_requests / max(self.total_search_s, 1e-9)
+
+
+@dataclasses.dataclass
+class _Request:
+    """A queued request: logical arrival (trace clock) + wall-clock submit."""
+
+    arrival_t: float
+    wall_t: float
+    query: np.ndarray
+    seq: int
 
 
 class AnnServer:
@@ -71,24 +101,36 @@ class AnnServer:
         self.quantized = isinstance(index, EMQGIndex)
         self.engine = engine
         self.backend = backend
-        self._queue: list[tuple[float, np.ndarray]] = []
+        self._queue: list[_Request] = []
+        self._seq = 0
         self.stats = ServeStats()
 
-    def _search(self, queries: jnp.ndarray):
+    def _search(self, queries: jnp.ndarray,
+                params: Optional[SearchParams] = None,
+                engine: Optional[str] = None,
+                backend: Optional[str] = None):
+        """Run one batch through the selected engine.  The overrides are the
+        seam the resilience layer steers (ladder params, breaker tier) and
+        the fault harness wraps."""
+        params = params if params is not None else self.params
+        engine = engine if engine is not None else self.engine
+        backend = backend if backend is not None else self.backend
         if self.quantized:
-            if self.engine == "beam":
-                return probing_search(self.index, queries, self.params,
-                                      backend=self.backend)
-            return legacy_probing_search(self.index, queries, self.params)
-        if self.engine == "beam":
-            return search(self.index, queries, self.params,
-                          backend=self.backend)
-        return legacy_search(self.index, queries, self.params)
+            if engine == "beam":
+                return probing_search(self.index, queries, params,
+                                      backend=backend)
+            return legacy_probing_search(self.index, queries, params)
+        if engine == "beam":
+            return search(self.index, queries, params, backend=backend)
+        return legacy_search(self.index, queries, params)
 
     # -- request path -------------------------------------------------------
     def submit(self, query: np.ndarray, arrival_t: Optional[float] = None):
-        self._queue.append((arrival_t if arrival_t is not None else time.time(),
-                            np.asarray(query, np.float32)))
+        wall = time.time()
+        self._queue.append(_Request(
+            arrival_t=arrival_t if arrival_t is not None else wall,
+            wall_t=wall, query=np.asarray(query, np.float32), seq=self._seq))
+        self._seq += 1
 
     def submit_many(self, queries: np.ndarray, arrival_ts=None):
         for i, q in enumerate(queries):
@@ -98,7 +140,9 @@ class AnnServer:
         for b in self.buckets:
             if n <= b:
                 return b
-        return self.buckets[-1]
+        # n exceeds every bucket (max_batch > largest bucket): serve unpadded
+        # rather than computing a negative pad.
+        return n
 
     def drain(self) -> list[tuple[np.ndarray, np.ndarray]]:
         """Serve everything queued; returns [(ids, dists)] per request in
@@ -107,8 +151,7 @@ class AnnServer:
         while self._queue:
             take = self._queue[: self.max_batch]
             self._queue = self._queue[self.max_batch:]
-            ts = np.array([t for t, _ in take])
-            qs = np.stack([q for _, q in take])
+            qs = np.stack([r.query for r in take])
             bucket = self._bucket(len(take))
             pad = bucket - len(take)
             if pad:
@@ -118,9 +161,9 @@ class AnnServer:
             ids = np.asarray(res.ids)
             dists = np.asarray(res.dists)
             t1 = time.time()
-            for i in range(len(take)):
+            for i, req in enumerate(take):
                 out.append((ids[i], dists[i]))
-                lat = t1 - ts[i]
+                lat = t1 - req.wall_t
                 self.stats.n_requests += 1
                 self.stats.total_latency_s += lat
                 self.stats.max_latency_s = max(self.stats.max_latency_s, lat)

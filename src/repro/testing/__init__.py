@@ -1,0 +1,9 @@
+from .faults import (  # noqa: F401
+    FaultPlan,
+    KernelFault,
+    flip_bits,
+    inject_search_faults,
+    make_torn_tmp,
+    tamper_array,
+    tear_checkpoint,
+)

@@ -1,0 +1,191 @@
+"""Deterministic fault injection for the serve + checkpoint stack.
+
+Resilience claims are only as good as the faults they were tested against,
+and "unplug the TPU" is not a unit test.  This module injects the failure
+modes the resilience layer (``repro.serve.resilience``) and the checkpoint
+walk-back (``repro.checkpoint.manager``) are built to contain, each one
+deterministic and seedable so CI reproduces exactly:
+
+* **Search faults** — ``inject_search_faults`` wraps a server's
+  ``_search`` seam with a ``FaultPlan``: raise ``KernelFault`` on chosen
+  calls (optionally only for a given engine/backend tier, which is how a
+  "Pallas kernel is broken, XLA is fine" scenario is staged) and/or add
+  latency spikes.
+* **Checkpoint corruption** — ``flip_bits`` (raw bit flips anywhere in a
+  file, e.g. ``arrays.npz``), ``tamper_array`` (perturb one stored array
+  while keeping the manifest byte-identical → exercises checksum
+  verification specifically), ``tear_checkpoint`` (drop the manifest →
+  invalid step), ``make_torn_tmp`` (a ``.tmp`` directory as left by a
+  process killed mid-save).
+
+Nothing here is imported by production code paths — faults flow only
+test → harness → server seam.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Optional
+
+import numpy as np
+
+
+class KernelFault(RuntimeError):
+    """Injected stand-in for an accelerator kernel failure."""
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Deterministic schedule of faults on the search seam.
+
+    ``fail_first`` fails the first N *matching* calls (matching = the
+    engine/backend filters, when set); ``fail_calls`` additionally fails
+    those matching-call indices (0-based).  ``latency_s`` sleeps before
+    every matching call (``latency_calls`` restricts it to given indices).
+    """
+
+    fail_first: int = 0
+    fail_calls: tuple[int, ...] = ()
+    match_engine: Optional[str] = None      # None → any engine
+    match_backend: Optional[str] = None     # None → any backend
+    exc_type: type = KernelFault
+    latency_s: float = 0.0
+    latency_calls: Optional[tuple[int, ...]] = None   # None → every call
+
+    def should_fail(self, match_idx: int) -> bool:
+        return match_idx < self.fail_first or match_idx in self.fail_calls
+
+    def delay_for(self, match_idx: int) -> float:
+        if self.latency_s <= 0:
+            return 0.0
+        if self.latency_calls is not None and match_idx not in self.latency_calls:
+            return 0.0
+        return self.latency_s
+
+
+class inject_search_faults:
+    """Context manager wrapping ``server._search`` with a ``FaultPlan``.
+
+    Counts calls (total and plan-matching) for assertions::
+
+        with inject_search_faults(srv, FaultPlan(fail_first=2)) as inj:
+            srv.submit_many(queries)
+            responses = srv.drain()
+        assert inj.n_failed == 2
+    """
+
+    def __init__(self, server, plan: FaultPlan):
+        self.server = server
+        self.plan = plan
+        self.n_calls = 0
+        self.n_matched = 0
+        self.n_failed = 0
+        self._orig = None
+
+    def _matches(self, engine: str, backend: str) -> bool:
+        return ((self.plan.match_engine is None
+                 or engine == self.plan.match_engine)
+                and (self.plan.match_backend is None
+                     or backend == self.plan.match_backend))
+
+    def __enter__(self):
+        self._orig = self.server._search
+        plan = self.plan
+
+        def wrapped(queries, params=None, engine=None, backend=None):
+            self.n_calls += 1
+            eng = engine if engine is not None else self.server.engine
+            bck = backend if backend is not None else self.server.backend
+            if self._matches(eng, bck):
+                idx = self.n_matched
+                self.n_matched += 1
+                delay = plan.delay_for(idx)
+                if delay > 0:
+                    time.sleep(delay)
+                if plan.should_fail(idx):
+                    self.n_failed += 1
+                    raise plan.exc_type(
+                        f"injected fault #{idx} on tier {eng}/{bck}")
+            return self._orig(queries, params=params, engine=engine,
+                              backend=backend)
+
+        self.server._search = wrapped
+        return self
+
+    def __exit__(self, *exc):
+        self.server._search = self._orig
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint corruption.
+# ---------------------------------------------------------------------------
+
+
+def flip_bits(path: str, n_bits: int = 8, seed: int = 0) -> list[int]:
+    """Flip ``n_bits`` deterministic bits in a file; returns byte offsets.
+
+    Offsets are drawn from the middle half of the file so small files keep
+    their zip local headers intact more often than not — but any outcome
+    (unreadable archive, checksum mismatch, silent data change) must be
+    contained by the restore walk-back, so callers should assert on the
+    *recovery*, not on which layer caught it.
+    """
+    rng = np.random.default_rng(seed)
+    with open(path, "rb") as f:
+        data = bytearray(f.read())
+    if not data:
+        raise ValueError(f"cannot flip bits in empty file: {path}")
+    lo, hi = len(data) // 4, max(len(data) // 4 + 1, 3 * len(data) // 4)
+    offsets = sorted(int(o) for o in rng.integers(lo, hi, size=n_bits))
+    for off in offsets:
+        data[off] ^= 1 << int(rng.integers(0, 8))
+    with open(path, "wb") as f:
+        f.write(bytes(data))
+    return offsets
+
+
+def tamper_array(step_dir: str, key: Optional[str] = None,
+                 amount: float = 1.0) -> str:
+    """Perturb one array inside ``arrays.npz``, leaving the manifest (and
+    therefore its recorded checksums) untouched — the restore path must
+    catch this via checksum verification, not via a load error.  Returns
+    the tampered key."""
+    npz = os.path.join(step_dir, "arrays.npz")
+    with np.load(npz) as z:
+        flat = {k: z[k].copy() for k in z.files}
+    if key is None:
+        key = sorted(flat.keys())[0]
+    arr = flat[key]
+    if arr.size == 0:
+        raise ValueError(f"array {key!r} is empty, nothing to tamper")
+    if np.issubdtype(arr.dtype, np.floating):
+        arr.flat[arr.size // 2] += amount
+    else:
+        arr.flat[arr.size // 2] ^= 1
+    np.savez(npz, **flat)
+    return key
+
+
+def tear_checkpoint(step_dir: str) -> None:
+    """Invalidate a committed checkpoint the way a torn write would:
+    remove its manifest (a step without a readable manifest is never
+    listed as restorable)."""
+    os.remove(os.path.join(step_dir, "manifest.json"))
+
+
+def make_torn_tmp(directory: str, step: int) -> str:
+    """Recreate the on-disk state of a process killed mid-save: a
+    ``step_XXXXXXXXX.tmp`` directory holding a partial manifest and a
+    truncated ``arrays.npz``.  The next committed save must prune it and
+    ``restore_latest`` must never consider it."""
+    tmp = os.path.join(directory, f"step_{step:09d}.tmp")
+    os.makedirs(tmp, exist_ok=True)
+    with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+        f.write(b"PK\x03\x04truncated-mid-write")
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        f.write(json.dumps({"step": step})[:-5])    # torn JSON
+    return tmp
