@@ -10,7 +10,10 @@ Public API:
                        batch-level beam engine (SearchParams.beam_width);
                        legacy_search / legacy_probing_search are the seed
                        per-query engines kept as parity oracles.
-    Distribution:      build_sharded, make_sharded_search
+    Distribution:      build_sharded, build_replicated, make_sharded_search,
+                       ShardHealthRegistry, FaultTolerantShardedSearch
+    Maintenance:       updates.JournaledLiveIndex (WAL + crash recovery),
+                       verify.audit (graph-invariant auditor)
     Theory probes:     local_optimum_mask, theorem4_delta_prime
 """
 
@@ -41,4 +44,4 @@ from .probing import (  # noqa: F401
     probing_search,
 )
 from . import baselines, bitset, distances, distributed, geometry, rabitq  # noqa: F401
-from . import filtered, mips, updates  # noqa: F401  (beyond-paper features)
+from . import filtered, mips, updates, verify  # noqa: F401  (beyond-paper features)

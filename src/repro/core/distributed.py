@@ -23,6 +23,20 @@ approximation, same as the single-node index).
 All index containers are pytrees → ``stack_indices`` builds the [S, ...]
 stacked representation with ``tree_map``, and the same code path serves
 GraphIndex (Alg. 3) and EMQGIndex (Alg. 5).
+
+Fault tolerance: ``run`` accepts a per-slot validity mask.  A dead slot's
+candidates are rewritten to (id=-1, dist=inf) *before* the merge, so both
+merge strategies exclude them without a second collective.  The host-side
+``ShardHealthRegistry`` tracks per-replica liveness and derives the mask:
+with replica groups (``build_replicated``, slot layout ``s·R + r``) exactly
+one live replica per logical shard participates — a lost primary fails over
+to its replica before coverage degrades at all.  When every replica of a
+shard is gone, ``FaultTolerantShardedSearch`` still answers, but each
+response carries explicit degradation accounting — ``coverage =
+live_shards/S`` and ``max_missed = min(k, Σ_dead min(k, |shard|))``, the
+worst case being all of a dead shard's top-k members belonging to the true
+global top-k (mirrors the ``1/(δ·α)`` bound reporting in
+``serve/resilience.py``).
 """
 
 from __future__ import annotations
@@ -68,6 +82,16 @@ class ShardedIndex:
     @property
     def n_shards(self) -> int:
         return self.offsets.shape[0]
+
+    @property
+    def dim(self) -> int:
+        g = self.index.graph if isinstance(self.index, EMQGIndex) else self.index
+        return int(g.vectors.shape[-1])
+
+    @property
+    def delta(self) -> float:
+        g = self.index.graph if isinstance(self.index, EMQGIndex) else self.index
+        return float(getattr(g, "delta", 0.0))
 
 
 def stack_indices(indices: Sequence, offsets: Sequence[int], n_total: int) -> ShardedIndex:
@@ -158,20 +182,30 @@ def make_sharded_search(mesh, shard_axes=("data",), query_axis=None,
         raise ValueError("ring merge requires a single shard axis")
     q_spec = P(query_axis) if query_axis else P()
 
-    def body(sidx: ShardedIndex, queries, params: SearchParams):
+    def body(sidx: ShardedIndex, queries, valid, params: SearchParams):
         local_index = jax.tree.map(lambda x: x[0], sidx.index)
         offset = sidx.offsets[0]
         res = _local_search(local_index, queries, params, quantized)
-        gids = jnp.where(res.ids >= 0, res.ids + offset, res.ids)
+        # mask dead shards *before* the merge: their candidates become
+        # (id=-1, dist=inf) and can never displace a live shard's entry —
+        # both merge strategies then exclude them for free
+        alive = valid[0]
+        gids = jnp.where(alive & (res.ids >= 0), res.ids + offset, -1)
+        d = jnp.where(gids >= 0, res.dists, jnp.inf)
         if merge == "ring":
-            return _merge_ring(gids, res.dists, params.k, axis_name, n_shards)
-        return _merge_all_gather(gids, res.dists, params.k, axis_name)
+            mi, md = _merge_ring(gids, d, params.k, axis_name, n_shards)
+        else:
+            mi, md = _merge_all_gather(gids, d, params.k, axis_name)
+        return jnp.where(jnp.isfinite(md), mi, -1), md
 
-    def run(sidx: ShardedIndex, queries, params: SearchParams):
+    def run(sidx: ShardedIndex, queries, params: SearchParams, valid=None):
+        if valid is None:
+            valid = jnp.ones((n_shards,), bool)
         index_specs = jax.tree.map(lambda _: P(shard_axes), sidx.index)
         in_specs = (
             ShardedIndex(index=index_specs, offsets=P(shard_axes), n_total=sidx.n_total),
             q_spec,
+            P(shard_axes),
         )
         fn = _shard_map(
             partial(body, params=params),
@@ -180,6 +214,153 @@ def make_sharded_search(mesh, shard_axes=("data",), query_axis=None,
             out_specs=(q_spec, q_spec),
             **{_CHECK_KW: False},
         )
-        return fn(sidx, queries)
+        return fn(sidx, queries, jnp.asarray(valid, bool))
 
     return run
+
+
+# ---------------------------------------------------------------------------
+# Shard health + coverage accounting (module docstring, fault tolerance).
+# ---------------------------------------------------------------------------
+
+def build_replicated(vectors, n_shards: int, n_replicas: int = 2,
+                     params: Optional[BuildParams] = None,
+                     quantized: bool = False, seed: int = 0) -> ShardedIndex:
+    """``build_sharded`` with each shard repeated R times — physical slot
+    layout ``s·R + r`` (replicas of a shard are adjacent)."""
+    base = build_sharded(vectors, n_shards, params, quantized, seed)
+    if n_replicas == 1:
+        return base
+    index = jax.tree.map(lambda x: jnp.repeat(x, n_replicas, axis=0),
+                         base.index)
+    offsets = jnp.repeat(base.offsets, n_replicas)
+    return ShardedIndex(index=index, offsets=offsets, n_total=base.n_total)
+
+
+class ShardHealthRegistry:
+    """Host-side liveness over S logical shards × R replicas.
+
+    ``participation()`` is the per-physical-slot mask handed to the sharded
+    search: at most ONE live replica per logical shard participates (two
+    replicas contributing the same rows would fill the merged top-k with
+    duplicate ids).  A logical shard is covered iff any replica is live.
+    """
+
+    def __init__(self, n_shards: int, n_replicas: int = 1):
+        self.n_shards = n_shards
+        self.n_replicas = n_replicas
+        self._live = np.ones((n_shards, n_replicas), bool)
+
+    def mark_dead(self, shard: int, replica: int = 0) -> None:
+        self._live[shard, replica] = False
+
+    def mark_live(self, shard: int, replica: int = 0) -> None:
+        self._live[shard, replica] = True
+
+    def live_shards(self) -> list[int]:
+        return [s for s in range(self.n_shards) if self._live[s].any()]
+
+    def dead_shards(self) -> list[int]:
+        return [s for s in range(self.n_shards) if not self._live[s].any()]
+
+    def coverage(self) -> float:
+        return len(self.live_shards()) / self.n_shards
+
+    @property
+    def n_failover(self) -> int:
+        """Logical shards currently served by a non-primary replica."""
+        return int(sum(1 for s in range(self.n_shards)
+                       if not self._live[s, 0] and self._live[s].any()))
+
+    def participation(self) -> np.ndarray:
+        """bool[S·R] — first live replica of each logical shard."""
+        mask = np.zeros((self.n_shards, self.n_replicas), bool)
+        for s in range(self.n_shards):
+            alive = np.where(self._live[s])[0]
+            if alive.size:
+                mask[s, alive[0]] = True
+        return mask.ravel()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedSearchResult:
+    """Merged top-k plus explicit per-response degradation accounting."""
+
+    ids: jax.Array                 # [B, k] global ids (-1 where unfilled)
+    dists: jax.Array               # [B, k]
+    coverage: float                # live logical shards / S
+    live_shards: int
+    n_shards: int
+    max_missed: int                # worst-case true neighbors lost to dead shards
+    failover: int                  # shards answered by a non-primary replica
+
+
+class FaultTolerantShardedSearch:
+    """Host wrapper: registry-masked sharded search with coverage accounting.
+
+    The mask is recomputed from the registry on every call, so marking a
+    shard dead (or a replica live again) takes effect on the next query
+    batch without re-tracing — ``valid`` is a runtime array input.
+    """
+
+    def __init__(self, sidx: ShardedIndex, mesh, shard_axes=("data",),
+                 query_axis=None, merge: str = "all_gather",
+                 quantized: bool = False, n_replicas: int = 1,
+                 registry: Optional[ShardHealthRegistry] = None):
+        n_slots = sidx.n_shards
+        if n_slots % n_replicas:
+            raise ValueError(f"{n_slots} slots not divisible by "
+                             f"{n_replicas} replicas")
+        self.sidx = sidx
+        self.quantized = quantized
+        # a shared registry lets several searchers (e.g. the two merge
+        # strategies of a resilient server) see one liveness truth
+        self.registry = registry if registry is not None else \
+            ShardHealthRegistry(n_slots // n_replicas, n_replicas)
+        if self.registry.n_shards * self.registry.n_replicas != n_slots:
+            raise ValueError("registry shape does not match index slots")
+        self._run = make_sharded_search(mesh, shard_axes=shard_axes,
+                                        query_axis=query_axis, merge=merge,
+                                        quantized=quantized)
+        offs = np.asarray(sidx.offsets)[::n_replicas]
+        self.shard_sizes = np.diff(np.append(offs, sidx.n_total)).astype(int)
+
+    def __call__(self, queries, params: SearchParams) -> ShardedSearchResult:
+        mask = self.registry.participation()
+        if not mask.any():
+            raise RuntimeError("no live shard replicas")
+        ids, dists = self._run(self.sidx, queries, params, valid=mask)
+        dead = self.registry.dead_shards()
+        max_missed = int(min(params.k,
+                             sum(min(params.k, self.shard_sizes[s])
+                                 for s in dead)))
+        return ShardedSearchResult(
+            ids=ids, dists=dists,
+            coverage=self.registry.coverage(),
+            live_shards=len(self.registry.live_shards()),
+            n_shards=self.registry.n_shards,
+            max_missed=max_missed,
+            failover=self.registry.n_failover)
+
+
+def host_reference_merge(sidx: ShardedIndex, registry: ShardHealthRegistry,
+                         queries, params: SearchParams,
+                         quantized: bool = False):
+    """Oracle for the masked merge: per-slot searches on the host, merged
+    over exactly the participating slots.  O(S) sequential searches — test
+    and audit use only."""
+    mask = registry.participation()
+    all_i, all_d = [], []
+    for slot in np.where(mask)[0]:
+        local = jax.tree.map(lambda x, s=slot: x[s], sidx.index)
+        res = _local_search(local, queries, params, quantized)
+        ids = np.asarray(res.ids)
+        offs = int(np.asarray(sidx.offsets)[slot])
+        all_i.append(np.where(ids >= 0, ids + offs, -1))
+        all_d.append(np.where(ids >= 0, np.asarray(res.dists), np.inf))
+    cat_i = np.concatenate(all_i, axis=1)
+    cat_d = np.concatenate(all_d, axis=1)
+    order = np.argsort(cat_d, axis=1, kind="stable")[:, : params.k]
+    mi = np.take_along_axis(cat_i, order, axis=1)
+    md = np.take_along_axis(cat_d, order, axis=1)
+    return np.where(np.isfinite(md), mi, -1), md

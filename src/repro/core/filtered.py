@@ -62,4 +62,5 @@ def filtered_search(graph: GraphIndex, queries, filter_mask, k: int,
                         n_dist_comps=res.n_dist_comps,
                         n_approx_comps=res.n_approx_comps,
                         n_hops=res.n_hops, final_l=res.final_l,
-                        saturated=res.saturated)
+                        saturated=res.saturated,
+                        n_encounters=res.n_encounters)

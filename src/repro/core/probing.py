@@ -73,6 +73,7 @@ class _BeamPState(NamedTuple):
     l: jax.Array           # int32[B]
     n_dist: jax.Array      # int32[B]
     n_approx: jax.Array    # int32[B]
+    n_enc: jax.Array       # int32[B]  candidate encounters (pre-dedup)
     n_hops: jax.Array      # int32[B]
     done: jax.Array        # bool[B]
     saturated: jax.Array   # bool[B]
@@ -108,6 +109,7 @@ def _beam_probing_batch(
         l=jnp.full((B,), min(max(p.l0, p.k), p.l_max), jnp.int32),
         n_dist=jnp.ones((B,), jnp.int32),
         n_approx=jnp.zeros((B,), jnp.int32),
+        n_enc=jnp.ones((B,), jnp.int32),
         n_hops=jnp.zeros((B,), jnp.int32),
         done=jnp.zeros((B,), jnp.bool_),
         saturated=jnp.zeros((B,), jnp.bool_),
@@ -170,6 +172,9 @@ def _beam_probing_batch(
         seen = bitset_set(s.seen, new_ids)
         d2a = batch_approx(new_ids)                            # [B, W·M]
         n_approx = s.n_approx + jnp.sum(new_ids >= 0, axis=1).astype(jnp.int32)
+        # encounters: valid neighbor ids pre-dedup, plus probed candidates
+        n_enc = s.n_enc + jnp.sum(nbrs >= 0, axis=1).astype(jnp.int32) \
+            + jnp.sum(w_ids >= 0, axis=1).astype(jnp.int32)
 
         n_hops = s.n_hops + jnp.sum(selv_w, axis=1).astype(jnp.int32) \
             + jnp.sum(selv_u, axis=1).astype(jnp.int32)
@@ -190,7 +195,8 @@ def _beam_probing_batch(
             ce_ids=ce_ids, ce_d2=ce_d2, ce_vis=ce_vis,
             ca_ids=ca_ids, ca_d2=ca_d2, ca_prb=ca_prb,
             seen=seen, d2_last=d2_last, l=l, n_dist=n_dist,
-            n_approx=n_approx, n_hops=n_hops, done=done, saturated=saturated)
+            n_approx=n_approx, n_enc=n_enc, n_hops=n_hops, done=done,
+            saturated=saturated)
 
     return jax.lax.while_loop(cond, body, st)
 
@@ -237,6 +243,7 @@ def probing_search(
         n_hops=st.n_hops,
         final_l=st.l,
         saturated=st.saturated,
+        n_encounters=st.n_enc,
     )
     if with_candidates:
         return res, st.ce_ids, jnp.sqrt(jnp.maximum(st.ce_d2, 0.0))
@@ -261,6 +268,7 @@ class _PState(NamedTuple):
     l: jax.Array
     n_dist: jax.Array
     n_approx: jax.Array
+    n_enc: jax.Array
     n_hops: jax.Array
     done: jax.Array
     saturated: jax.Array
@@ -284,6 +292,7 @@ def _probing_one(neighbors, exact_fn, approx_fn, q, ctx, start, p: SearchParams)
         l=jnp.int32(min(max(p.l0, p.k), p.l_max)),
         n_dist=jnp.int32(1),
         n_approx=jnp.int32(0),
+        n_enc=jnp.int32(1),
         n_hops=jnp.int32(0),
         done=jnp.bool_(False),
         saturated=jnp.bool_(False),
@@ -320,6 +329,7 @@ def _probing_one(neighbors, exact_fn, approx_fn, q, ctx, start, p: SearchParams)
         )
         return s._replace(ce_vis=ce_vis, ca_ids=ca_ids, ca_d2=ca_d2,
                           ca_prb=ca_prb, d2_last=d2_u, n_approx=n_approx,
+                          n_enc=s.n_enc + jnp.sum(valid).astype(jnp.int32),
                           n_hops=s.n_hops + 1)
 
     def probe(s: _PState, sel_w) -> _PState:
@@ -336,7 +346,8 @@ def _probing_one(neighbors, exact_fn, approx_fn, q, ctx, start, p: SearchParams)
         )
         return s._replace(ce_ids=ce_ids, ce_d2=ce_d2, ce_vis=ce_vis,
                           ca_prb=ca_prb, t_ids=t_ids, t_cnt=t_cnt,
-                          n_dist=s.n_dist + 1, n_hops=s.n_hops + 1)
+                          n_dist=s.n_dist + 1, n_enc=s.n_enc + 1,
+                          n_hops=s.n_hops + 1)
 
     def converged(s: _PState) -> _PState:
         if not p.adaptive:
@@ -414,6 +425,7 @@ def legacy_probing_search(
         n_hops=st.n_hops,
         final_l=st.l,
         saturated=st.saturated,
+        n_encounters=st.n_enc,
     )
     if with_candidates:
         return res, st.ce_ids, jnp.sqrt(jnp.maximum(st.ce_d2, 0.0))
@@ -455,10 +467,10 @@ def ags_search(index: EMQGIndex, queries: jax.Array, params: SearchParams,
         # exact rerank of the whole final buffer
         d2 = exact_fn(q, st.cand_ids)
         order = jnp.argsort(d2)
-        return (st.cand_ids[order], d2[order], st.n_dist, st.n_hops, st.l,
-                st.saturated)
+        return (st.cand_ids[order], d2[order], st.n_dist, st.n_enc,
+                st.n_hops, st.l, st.saturated)
 
-    ids, d2, n_approx, hops, final_l, sat = jax.vmap(one)(queries, start)
+    ids, d2, n_approx, n_enc, hops, final_l, sat = jax.vmap(one)(queries, start)
     k = params.k
     return SearchResult(
         ids=ids[:, :k],
@@ -468,4 +480,5 @@ def ags_search(index: EMQGIndex, queries: jax.Array, params: SearchParams,
         n_hops=hops,
         final_l=final_l,
         saturated=sat,
+        n_encounters=n_enc,
     )

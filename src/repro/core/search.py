@@ -152,6 +152,7 @@ class _BeamState(NamedTuple):
     seen: jax.Array        # uint32[B, nw] packed visited bitset
     l: jax.Array           # int32[B]    current candidate window (Alg. 3)
     n_dist: jax.Array      # int32[B]    exact distance evaluations
+    n_enc: jax.Array       # int32[B]    candidate encounters (pre-dedup)
     n_hops: jax.Array      # int32[B]    expansions
     done: jax.Array        # bool[B]
     saturated: jax.Array   # bool[B]     l hit l_max before the α-rule fired
@@ -229,6 +230,7 @@ def _beam_search_batch(
         seen=bitset_set(bitset_make(B, n), start[:, None]),
         l=jnp.full((B,), min(max(p.l0, p.k), p.l_max), jnp.int32),
         n_dist=jnp.ones((B,), jnp.int32),
+        n_enc=jnp.ones((B,), jnp.int32),
         n_hops=jnp.zeros((B,), jnp.int32),
         done=jnp.zeros((B,), jnp.bool_),
         saturated=jnp.zeros((B,), jnp.bool_),
@@ -257,6 +259,10 @@ def _beam_search_batch(
         # -- neighbor gather + bitset dedup ---------------------------------
         nbrs = jnp.take(graph.neighbors, jnp.maximum(u_ids, 0), axis=0)
         nbrs = jnp.where(selv[:, :, None], nbrs, INVALID_ID).reshape(B, W * M)
+        # encounters: every valid neighbor id this hop produced, pre-dedup —
+        # the dedup-independent Exp-5 counter (ROADMAP: the bitset never
+        # re-evaluates pruned-then-reencountered nodes, so n_dist undercounts)
+        n_enc = s.n_enc + jnp.sum(nbrs >= 0, axis=1).astype(jnp.int32)
         fresh = (nbrs >= 0) & ~bitset_test(s.seen, nbrs)
         new_ids = unique_per_row(nbrs, fresh)                  # [B, W·M]
         seen = bitset_set(s.seen, new_ids)
@@ -278,7 +284,8 @@ def _beam_search_batch(
 
         return _BeamState(cand_ids=cand_ids, cand_d2=cand_d2,
                           cand_vis=cand_vis, seen=seen, l=l, n_dist=n_dist,
-                          n_hops=n_hops, done=done, saturated=saturated)
+                          n_enc=n_enc, n_hops=n_hops, done=done,
+                          saturated=saturated)
 
     return jax.lax.while_loop(cond, body, st)
 
@@ -331,6 +338,7 @@ def search(
         n_hops=st.n_hops,
         final_l=st.l,
         saturated=st.saturated,
+        n_encounters=st.n_enc,
     )
     if with_candidates:
         return res, st.cand_ids, jnp.sqrt(jnp.maximum(st.cand_d2, 0.0))
@@ -350,6 +358,7 @@ class _State(NamedTuple):
     t_cnt: jax.Array       # int32
     l: jax.Array           # int32    current candidate window (Alg. 3)
     n_dist: jax.Array      # int32    exact distance evaluations
+    n_enc: jax.Array       # int32    candidate encounters (pre-dedup)
     n_hops: jax.Array      # int32    expansions
     done: jax.Array        # bool
     saturated: jax.Array   # bool     l hit l_max before the α-rule fired
@@ -375,6 +384,7 @@ def _search_one(
         t_cnt=jnp.int32(0),
         l=jnp.int32(min(max(p.l0, p.k), p.l_max)),
         n_dist=jnp.int32(1),
+        n_enc=jnp.int32(1),
         n_hops=jnp.int32(0),
         done=jnp.bool_(False),
         saturated=jnp.bool_(False),
@@ -405,6 +415,7 @@ def _search_one(
 
         d2_new = dist_fn(q, jnp.where(fresh, nbrs, INVALID_ID))
         n_dist = s.n_dist + jnp.sum(fresh).astype(jnp.int32)
+        n_enc = s.n_enc + jnp.sum(valid).astype(jnp.int32)
 
         cand_ids, cand_d2, cand_vis = _merge_topc(
             s.cand_ids, s.cand_d2, cand_vis,
@@ -421,7 +432,8 @@ def _search_one(
             cand_vis = jnp.where(keep, cand_vis, False)
         return s._replace(
             cand_ids=cand_ids, cand_d2=cand_d2, cand_vis=cand_vis,
-            t_ids=t_ids, t_cnt=t_cnt, n_dist=n_dist, n_hops=s.n_hops + 1,
+            t_ids=t_ids, t_cnt=t_cnt, n_dist=n_dist, n_enc=n_enc,
+            n_hops=s.n_hops + 1,
         )
 
     def converged(s: _State) -> _State:
@@ -477,6 +489,7 @@ def legacy_search(
         n_hops=st.n_hops,
         final_l=st.l,
         saturated=st.saturated,
+        n_encounters=st.n_enc,
     )
     if with_candidates:
         return res, st.cand_ids, jnp.sqrt(jnp.maximum(st.cand_d2, 0.0))

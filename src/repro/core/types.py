@@ -134,6 +134,12 @@ class SearchResult:
     ``n_dist_comps`` counts *exact* distance evaluations per query — the
     paper's Exp-5 efficiency metric.  ``n_approx_comps`` counts quantized
     evaluations (δ-EMQG only).  ``n_hops`` counts expansions.
+    ``n_encounters`` counts candidate *encounters*: every valid neighbor id
+    produced by an expansion (plus every probed candidate, for the probing
+    engine) *before* dedup.  The beam engine's packed bitset never
+    re-evaluates a pruned-then-reencountered node, so its ``n_dist_comps``
+    undercounts relative to the paper's Exp-5 counter; ``n_encounters`` is
+    dedup-independent and identical across engines at ``beam_width=1``.
     ``saturated`` flags queries whose adaptive ``l`` hit the buffer cap
     before the α-stop rule fired (bound may not hold for those).
     """
@@ -145,6 +151,7 @@ class SearchResult:
     n_hops: jax.Array
     final_l: jax.Array
     saturated: jax.Array
+    n_encounters: jax.Array = None
 
 
 @_register

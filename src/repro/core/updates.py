@@ -15,21 +15,45 @@ them, preserving connectivity — the FreshDiskANN insight).  When tombstones
 exceed ``consolidate_frac``, ``consolidate`` splices each deleted node out
 by locally reconnecting its in-neighbors to its out-neighbors under the
 occlusion rule, then compacts.
+
+Crash safety (``JournaledLiveIndex``): every mutation batch is journaled to
+a write-ahead log *before* it touches the in-memory ``LiveIndex``.  A WAL
+record is two files committed in order — ``wal_XXXXXXXXX.npz`` (payload
+arrays) then ``wal_XXXXXXXXX.json`` (manifest: seq, op, per-array CRC32,
+the same integrity conventions as ``checkpoint/manager.py``) — each written
+via tmp + ``os.replace``.  A record is committed iff its manifest exists,
+parses, and every checksum matches; a crash mid-append leaves a torn
+(manifest-less or checksum-failing) record that recovery treats as
+never-written.  Periodic full checkpoints (``checkpoint()``) bound replay
+length; ``recover()`` restores the newest intact checkpoint (corrupt steps
+are walked back, courtesy of the manager) and replays committed WAL
+records in sequence.  Because every op is a deterministic function of
+(state, payload), recovery reproduces the uninterrupted run bit-for-bit.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import json
+import logging
+import os
+import re
+import zlib
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .build_approx import BuildParams, _prep_candidates, _select_block
+from repro.checkpoint.manager import list_steps, restore_latest, save_checkpoint
+
+from .build_approx import (BuildParams, _prep_candidates,
+                           _repair_connectivity, _select_block)
 from .distances import medoid as find_medoid
 from .search import SearchParams, search
 from .types import GraphIndex, SearchResult
+
+log = logging.getLogger("repro.updates")
 
 
 @dataclasses.dataclass
@@ -55,8 +79,14 @@ def as_live(graph: GraphIndex, params: Optional[BuildParams] = None) -> LiveInde
                      params=params or BuildParams())
 
 
-def insert(live: LiveIndex, new_vectors: np.ndarray) -> LiveIndex:
-    """Batched insertion.  Returns a new LiveIndex (functional host state)."""
+def insert(live: LiveIndex, new_vectors: np.ndarray,
+           fault_hook: Optional[Callable[[str], None]] = None) -> LiveIndex:
+    """Batched insertion.  Returns a new LiveIndex (functional host state).
+
+    ``fault_hook`` (testing only) is called at the ``mid_splice`` point —
+    after the new rows are spliced into the adjacency but before reverse
+    edges restore the local δ-closure; a hook that raises simulates a crash
+    that leaves a half-mutated adjacency on the floor."""
     p = live.params
     g = live.graph
     vec_np = np.asarray(g.vectors)
@@ -85,6 +115,8 @@ def insert(live: LiveIndex, new_vectors: np.ndarray) -> LiveIndex:
     deg = (nbr >= 0).sum(1).astype(np.int32)
     nbr[n0:] = kept
     deg[n0:] = cnt
+    if fault_hook is not None:
+        fault_hook("mid_splice")
 
     # reverse edges under the cap; replace the longest edge when full so new
     # nodes always become reachable (same rule as connectivity repair)
@@ -102,6 +134,12 @@ def insert(live: LiveIndex, new_vectors: np.ndarray) -> LiveIndex:
                 worst = int(np.argmax(d2row))
                 if d2row[worst] > ((all_vecs[u] - all_vecs[v]) ** 2).sum():
                     nbr[v, worst] = u
+
+    # evicting a full row's longest edge above can sever some node's only
+    # in-edge — run the builder's connectivity repair so every node stays
+    # reachable from the medoid (deterministic, so WAL replay reproduces it)
+    deg = (nbr >= 0).sum(1).astype(np.int32)
+    _repair_connectivity(all_vecs, nbr, deg, M, int(np.asarray(g.medoid)))
 
     graph = GraphIndex(vectors=vectors, neighbors=jnp.asarray(nbr),
                        medoid=g.medoid, kind=g.kind, delta=g.delta)
@@ -137,7 +175,8 @@ def search_live(live: LiveIndex, queries, k: int, alpha: float = 1.2,
                         n_dist_comps=res.n_dist_comps,
                         n_approx_comps=res.n_approx_comps,
                         n_hops=res.n_hops, final_l=res.final_l,
-                        saturated=res.saturated)
+                        saturated=res.saturated,
+                        n_encounters=res.n_encounters)
 
 
 def consolidate(live: LiveIndex) -> LiveIndex:
@@ -199,3 +238,273 @@ def consolidate(live: LiveIndex) -> LiveIndex:
                        medoid=jnp.int32(med), kind=g.kind, delta=g.delta)
     return LiveIndex(graph=graph, tombstones=np.zeros(alive.size, bool),
                      params=p)
+
+
+# ---------------------------------------------------------------------------
+# Write-ahead log + crash-safe journaled index (module docstring, part 2).
+# ---------------------------------------------------------------------------
+
+_WAL_RE = re.compile(r"^wal_(\d{9})\.json$")
+
+
+class WalCorruptError(RuntimeError):
+    """A WAL record failed integrity checks (treated as never-written)."""
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+def _atomic_write(path: str, data: bytes) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def wal_append(wal_dir: str, seq: int, op: str,
+               payload: dict[str, np.ndarray],
+               fault_hook: Optional[Callable[[str], None]] = None) -> str:
+    """Append one committed record.  Payload npz lands first, the manifest
+    (whose existence *is* the commit) second — a crash between the two
+    (the ``torn_journal`` fault point) leaves an uncommitted torn record."""
+    os.makedirs(wal_dir, exist_ok=True)
+    base = os.path.join(wal_dir, f"wal_{seq:09d}")
+    import io
+    buf = io.BytesIO()
+    np.savez(buf, **payload)
+    _atomic_write(base + ".npz", buf.getvalue())
+    if fault_hook is not None:
+        fault_hook("torn_journal")
+    manifest = {
+        "seq": seq,
+        "op": op,
+        "keys": sorted(payload.keys()),
+        "dtypes": {k: str(v.dtype) for k, v in payload.items()},
+        "shapes": {k: list(v.shape) for k, v in payload.items()},
+        "checksums": {k: _crc(v) for k, v in payload.items()},
+    }
+    _atomic_write(base + ".json", json.dumps(manifest).encode())
+    return base + ".json"
+
+
+def wal_read(wal_dir: str, seq: int) -> tuple[str, dict[str, np.ndarray]]:
+    """Load + verify one record.  Raises ``WalCorruptError`` on any
+    integrity violation (missing/torn manifest, unreadable npz, checksum
+    mismatch) — recovery treats those records as never-written."""
+    base = os.path.join(wal_dir, f"wal_{seq:09d}")
+    if not os.path.exists(base + ".json") and not os.path.exists(base + ".npz"):
+        raise FileNotFoundError(f"no WAL record {seq}")   # clean end of log
+    try:
+        with open(base + ".json") as f:
+            manifest = json.load(f)
+    except Exception as e:
+        # payload present but manifest missing/unparsable: torn record
+        raise WalCorruptError(f"record {seq}: unreadable manifest: {e}") from e
+    try:
+        with np.load(base + ".npz") as z:
+            payload = {k: z[k].copy() for k in z.files}
+    except Exception as e:
+        raise WalCorruptError(f"record {seq}: unreadable payload: {e}") from e
+    if set(manifest.get("keys", [])) != set(payload.keys()):
+        raise WalCorruptError(f"record {seq}: manifest/payload key mismatch")
+    for k, arr in payload.items():
+        want = manifest["checksums"].get(k)
+        if want is not None and _crc(arr) != want:
+            raise WalCorruptError(f"record {seq}: checksum mismatch on {k!r}")
+    return manifest["op"], payload
+
+
+def wal_seqs(wal_dir: str) -> list[int]:
+    """Sequence numbers of records with a manifest present (not verified)."""
+    if not os.path.isdir(wal_dir):
+        return []
+    return sorted(int(m.group(1))
+                  for m in map(_WAL_RE.match, os.listdir(wal_dir)) if m)
+
+
+def _truncate_wal(wal_dir: str, upto_seq: int) -> None:
+    for s in wal_seqs(wal_dir):
+        if s <= upto_seq:
+            base = os.path.join(wal_dir, f"wal_{s:09d}")
+            for suffix in (".json", ".npz"):
+                try:
+                    os.remove(base + suffix)
+                except FileNotFoundError:
+                    pass
+
+
+def _apply_op(live: LiveIndex, op: str, payload: dict,
+              fault_hook=None) -> LiveIndex:
+    """Deterministic op application — shared by the live path and replay."""
+    if op == "insert":
+        return insert(live, payload["vectors"], fault_hook=fault_hook)
+    if op == "delete":
+        return delete(live, payload["ids"])
+    if op == "consolidate":
+        return consolidate(live)
+    raise ValueError(f"unknown WAL op: {op!r}")
+
+
+class JournaledLiveIndex:
+    """A ``LiveIndex`` whose mutations are crash-safe (WAL + checkpoints).
+
+    Layout under ``directory``::
+
+        meta.json            static state (BuildParams, kind, δ) — written once
+        ckpt/step_XXXXXXXXX/ full snapshots via ``checkpoint.manager``
+                             (step number == WAL sequence at save time)
+        wal/wal_XXXXXXXXX.{npz,json}   journal records (seq 1, 2, ...)
+
+    ``fault_hook(point)`` (testing only) is invoked at the named crash
+    points — ``before_journal``, ``torn_journal``, ``after_journal``,
+    ``mid_splice`` — with the convention that a raising hook simulates the
+    process dying there; the on-disk state is whatever the protocol had
+    durably committed by that point.
+
+    ``consolidate_frac``: when a delete pushes the tombstone fraction past
+    this threshold, a ``consolidate`` is triggered automatically — and
+    journaled as its own record, so replay re-runs it at the same position
+    in the op stream.
+    """
+
+    def __init__(self, live: LiveIndex, directory: str, *,
+                 seq: int = 0, consolidate_frac: float = 0.3,
+                 keep_checkpoints: int = 3,
+                 fault_hook: Optional[Callable[[str], None]] = None):
+        self.live = live
+        self.directory = directory
+        self.seq = seq
+        self.consolidate_frac = consolidate_frac
+        self.keep_checkpoints = keep_checkpoints
+        self.fault_hook = fault_hook
+        self.wal_dir = os.path.join(directory, "wal")
+        self.ckpt_dir = os.path.join(directory, "ckpt")
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def create(cls, live: LiveIndex, directory: str,
+               **kw) -> "JournaledLiveIndex":
+        """Initialize a journal directory: meta + a seq-0 base checkpoint."""
+        os.makedirs(directory, exist_ok=True)
+        self = cls(live, directory, **kw)
+        meta = {
+            "kind": live.graph.kind,
+            "delta": live.graph.delta,
+            "params": dataclasses.asdict(live.params),
+            "consolidate_frac": self.consolidate_frac,
+        }
+        _atomic_write(os.path.join(directory, "meta.json"),
+                      json.dumps(meta).encode())
+        self.checkpoint()
+        return self
+
+    # -- state snapshot ------------------------------------------------------
+    def _tree(self) -> dict[str, np.ndarray]:
+        g = self.live.graph
+        return {
+            "vectors": np.asarray(g.vectors),
+            "neighbors": np.asarray(g.neighbors),
+            "medoid": np.asarray(g.medoid),
+            "tombstones": np.asarray(self.live.tombstones),
+        }
+
+    def checkpoint(self) -> str:
+        """Commit a full snapshot at the current sequence, then drop WAL
+        records no retained checkpoint still needs (older snapshots kept by
+        ``keep_checkpoints`` must stay replayable — if the newest snapshot
+        is later found corrupt, recovery walks back and rolls forward)."""
+        path = save_checkpoint(self.ckpt_dir, self.seq, self._tree(),
+                               keep=self.keep_checkpoints)
+        steps = list_steps(self.ckpt_dir)
+        if steps:
+            _truncate_wal(self.wal_dir, min(steps))
+        return path
+
+    # -- mutations (journal first, splice second) ----------------------------
+    def _fault(self, point: str) -> None:
+        if self.fault_hook is not None:
+            self.fault_hook(point)
+
+    def _mutate(self, op: str, payload: dict[str, np.ndarray]) -> None:
+        self._fault("before_journal")
+        wal_append(self.wal_dir, self.seq + 1, op, payload,
+                   fault_hook=self.fault_hook)
+        self._fault("after_journal")
+        self.live = _apply_op(self.live, op, payload,
+                              fault_hook=self.fault_hook)
+        self.seq += 1
+
+    def insert(self, vectors) -> None:
+        self._mutate("insert",
+                     {"vectors": np.asarray(vectors, np.float32)})
+
+    def delete(self, ids) -> None:
+        self._mutate("delete", {"ids": np.asarray(ids, np.int64)})
+        if self.live.frac_deleted > self.consolidate_frac:
+            self.consolidate()
+
+    def consolidate(self) -> None:
+        self._mutate("consolidate", {})
+
+    def search(self, queries, k: int, **kw) -> SearchResult:
+        return search_live(self.live, queries, k, **kw)
+
+    @property
+    def n_live(self) -> int:
+        return self.live.n_live
+
+
+def recover(directory: str) -> tuple[JournaledLiveIndex, dict]:
+    """Rebuild a ``JournaledLiveIndex`` from disk after a crash.
+
+    Restores the newest intact checkpoint (corrupt steps walk back inside
+    ``restore_latest``), then replays committed WAL records in sequence; the
+    replay stops at the first missing or torn record (= the op the crash
+    interrupted before its commit point — by WAL semantics it never
+    happened).  Returns ``(journal, info)`` where ``info`` reports the
+    checkpoint step used, the records replayed, and any torn record seen.
+    """
+    with open(os.path.join(directory, "meta.json")) as f:
+        meta = json.load(f)
+    params = BuildParams(**meta["params"])
+    template = {
+        "vectors": np.zeros((0, 0), np.float32),
+        "neighbors": np.zeros((0, 0), np.int32),
+        "medoid": np.zeros((), np.int32),
+        "tombstones": np.zeros((0,), np.bool_),
+    }
+    ckpt_dir = os.path.join(directory, "ckpt")
+    wal_dir = os.path.join(directory, "wal")
+    step, tree = restore_latest(ckpt_dir, template)
+    if step is None:
+        raise FileNotFoundError(
+            f"no intact checkpoint under {ckpt_dir}; cannot recover")
+    graph = GraphIndex(vectors=jnp.asarray(tree["vectors"]),
+                       neighbors=jnp.asarray(tree["neighbors"]),
+                       medoid=jnp.asarray(tree["medoid"], jnp.int32),
+                       kind=meta["kind"], delta=meta["delta"])
+    live = LiveIndex(graph=graph,
+                     tombstones=np.asarray(tree["tombstones"], bool),
+                     params=params)
+    info = {"checkpoint_step": step, "replayed": 0, "torn_seq": None}
+    seq = step
+    while True:
+        try:
+            op, payload = wal_read(wal_dir, seq + 1)
+        except WalCorruptError as e:
+            # torn record: crash mid-append → op never committed
+            log.warning("WAL replay stops at %s", e)
+            info["torn_seq"] = seq + 1
+            break
+        except FileNotFoundError:
+            break
+        live = _apply_op(live, op, payload)
+        seq += 1
+        info["replayed"] += 1
+    journal = JournaledLiveIndex(
+        live, directory, seq=seq,
+        consolidate_frac=meta.get("consolidate_frac", 0.3))
+    return journal, info

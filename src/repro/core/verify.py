@@ -1,0 +1,212 @@
+"""Graph-invariant auditor for δ-EMG indexes (post-recovery / post-mutation).
+
+The paper's approximation guarantee rests on structural invariants — not
+just connectivity but δ-monotonicity (Zhu & Zhang 2021: monotonicity is the
+load-bearing property; a connected-but-non-monotonic graph loses the
+``1/δ`` bound).  Streaming mutation (``core.updates``) and crash recovery
+(WAL replay) restore those invariants *locally*; this module checks them
+globally so a recovered or heavily-mutated index can be certified before it
+re-enters serving:
+
+* **structure**   — ids in range, no self-loops, no duplicate edges per row
+                    (hard errors: these mean corrupted adjacency).
+* **degree**      — every row within the cap; no isolated live node.
+* **tombstones**  — bitmap shape/dtype matches the graph; a live medoid
+                    (traversal entry point must not be deleted-but-routed).
+* **reachability** — BFS from the medoid covers every live node (a node
+                    unreachable by *any* path can never be returned).
+* **monotone descent (sampled)** — for a sample of live nodes ``u``, greedy
+  search with query ``vec(u)`` must reach ``u`` itself: on a δ-monotonic
+  graph every query has a monotone path from the entry point to its exact
+  nearest neighbor, and ``u`` is its own vector's exact NN (distance 0).
+  Checked with the production beam engine at a small fixed window.  An
+  *approximately*-built graph (Alg. 4) only approximates the closure, so
+  isolated probe misses are warnings; a failure fraction above
+  ``monotone_tol`` is a hard violation — that is a structural routing
+  defect, not a construction artifact.
+* **reverse-edge symmetry under the cap** — for each edge (u, v) with
+  ``deg(v) < M`` and v not tombstoned, (v, u) should usually exist (the
+  build and insert paths both add reverse edges while there is room).
+  Occlusion pruning may legitimately drop some, so this is reported as a
+  *metric* with a configurable tolerance, not a hard error.
+
+``audit`` returns an ``AuditReport``; ``report.ok`` is True iff no hard
+violation was found.  Runnable from the CLI via ``launch/serve.py --audit``
+and invoked by the fault-injection suite after every recovery/consolidate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from .search import SearchParams, search
+from .types import GraphIndex
+
+
+@dataclasses.dataclass
+class AuditReport:
+    """Outcome of one invariant audit."""
+
+    n: int = 0
+    n_live: int = 0
+    violations: list = dataclasses.field(default_factory=list)   # hard errors
+    warnings: list = dataclasses.field(default_factory=list)     # soft findings
+    metrics: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def summary(self) -> str:
+        head = ("OK" if self.ok else f"{len(self.violations)} VIOLATION(S)")
+        lines = [f"[audit] {head} — n={self.n} live={self.n_live}"]
+        lines += [f"  ERROR: {v}" for v in self.violations]
+        lines += [f"  warn:  {w}" for w in self.warnings]
+        for k in sorted(self.metrics):
+            lines.append(f"  {k} = {self.metrics[k]}")
+        return "\n".join(lines)
+
+
+def _bfs_live_reachable(nbr: np.ndarray, start: int) -> np.ndarray:
+    """bool[n]: reachable from ``start`` (tombstones route, so no filtering)."""
+    n = nbr.shape[0]
+    seen = np.zeros(n, bool)
+    seen[start] = True
+    frontier = np.array([start])
+    while frontier.size:
+        nxt = nbr[frontier].ravel()
+        nxt = nxt[nxt >= 0]
+        nxt = np.unique(nxt)
+        nxt = nxt[~seen[nxt]]
+        seen[nxt] = True
+        frontier = nxt
+    return seen
+
+
+def audit(graph: GraphIndex, tombstones: np.ndarray | None = None,
+          sample: int = 32, seed: int = 0,
+          symmetry_tol: float = 0.25,
+          check_monotone: bool = True,
+          monotone_tol: float = 0.1) -> AuditReport:
+    """Audit the invariants listed in the module docstring.
+
+    ``tombstones`` — optional bool[n] (a plain ``GraphIndex`` audit passes
+    None → all nodes live).  ``sample`` caps the number of monotone-descent
+    probes.  ``symmetry_tol`` is the tolerated fraction of missing reverse
+    edges among edges whose target has spare capacity; ``monotone_tol`` the
+    tolerated fraction of failed descent probes (see module docstring).
+    """
+    nbr = np.asarray(graph.neighbors)
+    n, M = nbr.shape
+    rep = AuditReport(n=n)
+    tomb = (np.zeros(n, bool) if tombstones is None
+            else np.asarray(tombstones))
+
+    # -- tombstone bitmap consistency ---------------------------------------
+    if tomb.shape != (n,):
+        rep.violations.append(
+            f"tombstone bitmap shape {tomb.shape} != ({n},)")
+        tomb = np.zeros(n, bool)
+    if tomb.dtype != np.bool_:
+        rep.violations.append(f"tombstone bitmap dtype {tomb.dtype} != bool")
+        tomb = tomb.astype(bool)
+    live = ~tomb
+    rep.n_live = int(live.sum())
+    med = int(np.asarray(graph.medoid))
+    if not (0 <= med < n):
+        rep.violations.append(f"medoid {med} out of range [0, {n})")
+        return rep        # nothing below is meaningful without an entry point
+    if tomb[med]:
+        rep.violations.append(f"medoid {med} is tombstoned")
+    if rep.n_live == 0:
+        rep.violations.append("no live nodes")
+        return rep
+
+    # -- structure ----------------------------------------------------------
+    n_oob = int(((nbr < -1) | (nbr >= n)).sum())
+    if n_oob:
+        rep.violations.append(f"{n_oob} neighbor ids out of range [-1, {n})")
+    self_loops = int((nbr == np.arange(n)[:, None]).sum())
+    if self_loops:
+        rep.violations.append(f"{self_loops} self-loop edges")
+    # duplicate neighbors within a row (among valid entries)
+    srt = np.sort(np.where(nbr >= 0, nbr, -np.arange(1, n * M + 1)
+                           .reshape(n, M)), axis=1)
+    n_dup = int(((srt[:, 1:] == srt[:, :-1]) & (srt[:, 1:] >= 0)).sum())
+    if n_dup:
+        rep.violations.append(f"{n_dup} duplicate edges within rows")
+
+    # -- degree -------------------------------------------------------------
+    deg = (nbr >= 0).sum(1)
+    rep.metrics["mean_degree"] = float(deg[live].mean())
+    rep.metrics["max_degree_cap"] = M
+    isolated = np.where(live & (deg == 0) & (np.arange(n) != med))[0]
+    if isolated.size and rep.n_live > 1:
+        rep.violations.append(
+            f"{isolated.size} isolated live nodes (first: "
+            f"{isolated[:5].tolist()})")
+
+    if n_oob:
+        return rep        # BFS / gather below would index out of bounds
+
+    # -- reachability (every live node, exact BFS) --------------------------
+    seen = _bfs_live_reachable(nbr, med)
+    unreachable = np.where(live & ~seen)[0]
+    rep.metrics["n_unreachable_live"] = int(unreachable.size)
+    if unreachable.size:
+        rep.violations.append(
+            f"{unreachable.size} live nodes unreachable from medoid "
+            f"(first: {unreachable[:5].tolist()})")
+
+    # -- reverse-edge symmetry under the cap --------------------------------
+    edge_set = set()
+    for u in range(n):
+        for v in nbr[u]:
+            if v >= 0:
+                edge_set.add((u, int(v)))
+    considered = missing = 0
+    for (u, v) in edge_set:
+        if deg[v] >= M or tomb[v] or tomb[u]:
+            continue          # cap-full or tombstoned targets are exempt
+        considered += 1
+        if (v, u) not in edge_set:
+            missing += 1
+    frac_missing = missing / max(considered, 1)
+    rep.metrics["reverse_edge_missing_frac"] = float(frac_missing)
+    if frac_missing > symmetry_tol:
+        rep.warnings.append(
+            f"reverse-edge symmetry-under-cap: {missing}/{considered} "
+            f"({frac_missing:.2f}) missing > tol {symmetry_tol}")
+
+    # -- sampled δ-monotone descent -----------------------------------------
+    if check_monotone and unreachable.size == 0:
+        rng = np.random.default_rng(seed)
+        live_ids = np.where(seen & live)[0]
+        probe = rng.choice(live_ids, size=min(sample, live_ids.size),
+                           replace=False).astype(np.int32)
+        vecs = np.asarray(graph.vectors)[probe]
+        p = SearchParams(k=1, l0=8, l_max=64, alpha=1.2, adaptive=True,
+                         max_hops=2048)
+        res = search(graph, jnp.asarray(vecs), p)
+        got = np.asarray(res.ids)[:, 0]
+        dists = np.asarray(res.dists)[:, 0]
+        # success = reached the node itself, or an exact duplicate of it
+        bad = np.where((got != probe) & (dists > 1e-5))[0]
+        rep.metrics["monotone_probes"] = int(probe.size)
+        rep.metrics["monotone_failures"] = int(bad.size)
+        if bad.size:
+            msg = (f"monotone descent failed for {bad.size}/{probe.size} "
+                   f"sampled nodes (first: {probe[bad[:5]].tolist()})")
+            if bad.size / probe.size > monotone_tol:
+                rep.violations.append(msg)
+            else:
+                rep.warnings.append(msg)
+    return rep
+
+
+def audit_live(live, **kw) -> AuditReport:
+    """Audit a ``core.updates.LiveIndex`` (graph + tombstone bitmap)."""
+    return audit(live.graph, tombstones=live.tombstones, **kw)

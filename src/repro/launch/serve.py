@@ -52,6 +52,14 @@ def main(argv=None) -> int:
                     help="queue depth that steps the ladder back up")
     ap.add_argument("--rungs", type=int, default=4,
                     help="degradation-ladder depth (resilient mode)")
+    ap.add_argument("--legacy-fallback", action="store_true",
+                    help="opt-in: keep the legacy per-query engine as the "
+                         "final circuit-breaker tier (default chain ends at "
+                         "beam/jnp with beam_width=1)")
+    ap.add_argument("--audit", action="store_true",
+                    help="run the graph-invariant auditor (core.verify) on "
+                         "the built index before serving; non-zero exit on "
+                         "violations")
     args = ap.parse_args(argv)
 
     print(f"[serve] building δ-EMQG over n={args.n} d={args.dim} …")
@@ -63,6 +71,13 @@ def main(argv=None) -> int:
     print(f"[serve] built in {time.time() - t0:.1f}s "
           f"(mean degree {float(np.asarray(idx.graph.degrees()).mean()):.1f})")
 
+    if args.audit:
+        from repro.core.verify import audit
+        rep = audit(idx.graph)
+        print(rep.summary())
+        if not rep.ok:
+            return 1
+
     queries = clustered_vectors(args.queries, args.dim, 48, seed=1)
     gt_d, gt_i = brute_force_knn(queries, base, args.k)
     params = SearchParams(k=args.k, l0=args.k, l_max=256, alpha=args.alpha,
@@ -73,7 +88,7 @@ def main(argv=None) -> int:
             deadline_s=None if args.deadline_ms is None
             else args.deadline_ms / 1e3,
             degrade_depth=args.degrade_at, recover_depth=args.recover_at,
-            n_rungs=args.rungs)
+            n_rungs=args.rungs, legacy_fallback=args.legacy_fallback)
         srv = ResilientAnnServer(idx, params, config=cfg,
                                  max_batch=128, buckets=(32, 128))
         srv.submit_many(queries)

@@ -6,5 +6,6 @@ from .resilience import (  # noqa: F401
     ResilienceConfig,
     ResilientAnnServer,
     Response,
+    ShardedResilientAnnServer,
     validate_query,
 )

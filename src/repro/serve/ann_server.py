@@ -13,9 +13,10 @@ QPS/latency knob), and ``backend`` selects the fused gather+L2
 implementation for the distance hot path ("auto" picks the tiled Pallas
 kernel on TPU, plain XLA elsewhere).  ``engine="legacy"`` keeps the seed
 per-query engine reachable for A/B traffic splits while the parity suite
-soaks — and doubles as the circuit-breaker fallback tier of the resilience
-layer (``resilience.py``), which wraps this server with admission control,
-deadlines, and an error-bounded degradation ladder.
+soaks; the resilience layer (``resilience.py``) wraps this server with
+admission control, deadlines, and an error-bounded degradation ladder whose
+circuit breaker falls back to ``(beam, jnp, beam_width=1)`` — the legacy
+engine joins that chain only by explicit opt-in.
 
 Clocks: every request records two timestamps — ``arrival_t``, the *logical*
 arrival time (caller-supplied when replaying a trace, else wall clock), and

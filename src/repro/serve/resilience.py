@@ -22,8 +22,13 @@ Containment layers, outermost first:
 4. **Retry with backoff** — transient search faults are retried on the
    same tier before the breaker reacts.
 5. **Circuit breaker** — repeated faults open the tier and fall back down
-   the chain ``(beam, pallas) → (beam, xla) → (legacy)``; after a cooldown
-   the tier is probed again (half-open) and closes on success.
+   the chain ``(beam, pallas) → (beam, jnp) → (beam, jnp, W=1)``; after a
+   cooldown the tier is probed again (half-open) and closes on success.
+   The last resort pins ``beam_width=1`` — greedy best-first on the same
+   lock-step engine, the minimal configuration that still carries the
+   ``1/(δ·α)`` guarantee.  The legacy per-query engine is reachable only
+   by explicit opt-in (``ResilienceConfig.legacy_fallback``) — it exists
+   for A/B parity, not as a hidden production code path.
 
 Everything is single-threaded and deterministically testable: the breaker
 takes an injectable clock and the fault harness (``repro.testing.faults``)
@@ -40,7 +45,7 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import EMQGIndex, SearchParams
+from repro.core import EMQGIndex, SearchParams, SearchResult
 
 from .ann_server import AnnServer, _Request
 
@@ -129,12 +134,14 @@ class DegradationLadder:
 class _Tier:
     engine: str
     backend: str
+    beam_width: Optional[int] = None    # pin W for this tier (None → ladder's)
     failures: int = 0
     open_until: float = 0.0
 
     @property
     def name(self) -> str:
-        return f"{self.engine}/{self.backend}"
+        base = f"{self.engine}/{self.backend}"
+        return base if self.beam_width is None else f"{base}/w{self.beam_width}"
 
 
 class CircuitBreaker:
@@ -152,7 +159,7 @@ class CircuitBreaker:
                  cooldown_s: float = 30.0, clock=time.monotonic):
         if not tiers:
             raise ValueError("breaker needs at least one tier")
-        self.tiers = [_Tier(e, b) for e, b in tiers]
+        self.tiers = [_Tier(*t) for t in tiers]
         self.threshold = threshold
         self.cooldown_s = cooldown_s
         self.clock = clock
@@ -175,13 +182,21 @@ class CircuitBreaker:
             t.open_until = self.clock() + self.cooldown_s
 
 
-def default_tiers(engine: str, backend: str) -> list[tuple[str, str]]:
-    """Primary tier as configured, then pallas→xla, then the legacy engine."""
-    chain = [(engine, backend)]
+def default_tiers(engine: str, backend: str,
+                  include_legacy: bool = False) -> list[tuple]:
+    """Primary tier as configured, then the portable jnp backend, then
+    ``(beam, jnp, W=1)`` — greedy best-first on the production engine, the
+    minimal tier that still carries the δ-EMG bound.  The legacy per-query
+    engine joins the chain only with ``include_legacy`` (kept for A/B
+    parity; excluding it from the default chain is what lets it be deleted
+    once the parity suite has soaked)."""
+    chain = [(engine, backend, None)]
     if engine == "beam" and backend != "jnp":
-        chain.append(("beam", "jnp"))
+        chain.append(("beam", "jnp", None))
     if engine != "legacy":
-        chain.append(("legacy", "auto"))
+        chain.append(("beam", "jnp", 1))
+    if include_legacy and engine != "legacy":
+        chain.append(("legacy", "auto", None))
     seen, out = set(), []
     for t in chain:
         if t not in seen:
@@ -208,6 +223,7 @@ class ResilienceConfig:
     breaker_threshold: int = 3          # consecutive faults to open a tier
     breaker_cooldown_s: float = 30.0
     delta: Optional[float] = None       # override index δ for bound reporting
+    legacy_fallback: bool = False       # opt-in: legacy engine as final tier
 
 
 @dataclasses.dataclass
@@ -235,6 +251,9 @@ class Response:
     deadline_missed: bool = False
     latency_s: float = 0.0
     error: Optional[str] = None
+    # -- shard coverage accounting (1.0 / 0 on single-node serving) ----------
+    coverage: float = 1.0               # live logical shards / S
+    max_missed: int = 0                 # worst-case true neighbors lost
 
     @property
     def ok(self) -> bool:
@@ -268,12 +287,15 @@ class ResilientAnnServer(AnnServer):
             else float(getattr(graph, "delta", 0.0))
         self.ladder = DegradationLadder(params, delta, config.n_rungs)
         self.breaker = CircuitBreaker(
-            default_tiers(self.engine, self.backend),
+            default_tiers(self.engine, self.backend,
+                          include_legacy=config.legacy_fallback),
             threshold=config.breaker_threshold,
             cooldown_s=config.breaker_cooldown_s, clock=clock)
         self.rung = 0
         self._done: list[Response] = []
         self._last_tier: Optional[int] = None
+        self._last_coverage: float = 1.0
+        self._last_max_missed: int = 0
 
     # -- request path -------------------------------------------------------
     def submit(self, query, arrival_t: Optional[float] = None,
@@ -330,7 +352,9 @@ class ResilientAnnServer(AnnServer):
                 self.stats.n_fallback += 1
             self._last_tier = i
             try:
-                res = self._search(jnp.asarray(qs), params=params,
+                tier_params = params if tier.beam_width is None else \
+                    dataclasses.replace(params, beam_width=tier.beam_width)
+                res = self._search(jnp.asarray(qs), params=tier_params,
                                    engine=tier.engine, backend=tier.backend)
                 out = (np.asarray(res.ids), np.asarray(res.dists),
                        np.asarray(res.saturated))
@@ -410,8 +434,91 @@ class ResilientAnnServer(AnnServer):
                     seq=req.seq, status="ok", ids=ids[i], dists=dists[i],
                     rung=rung, delta_bound=bound, tier=tier_name,
                     saturated=bool(sat[i]), deadline_missed=missed,
-                    latency_s=lat))
+                    latency_s=lat, coverage=self._last_coverage,
+                    max_missed=self._last_max_missed))
             self.stats.n_batches += 1
             self.stats.total_search_s += t1 - t0
         out.sort(key=lambda r: r.seq)
         return out
+
+
+# ---------------------------------------------------------------------------
+# Sharded resilient serving (distributed fault tolerance).
+# ---------------------------------------------------------------------------
+
+
+class ShardedResilientAnnServer(ResilientAnnServer):
+    """The resilient server fronting a ``ShardedIndex``.
+
+    The search seam routes to a registry-masked ``shard_map`` search
+    (``core.distributed.FaultTolerantShardedSearch``); the breaker chain is
+    the two merge strategies — a merge-time collective fault (the ring's
+    ``ppermute`` step dying with a shard) opens the primary merge tier and
+    falls back to the other, same-exactness merge.  Shard death is NOT a
+    breaker event: the registry masks the dead shard out and serving
+    continues at reduced coverage, reported per response (``coverage``,
+    ``max_missed``) — availability degrades *explicitly*, never silently.
+
+    ``kill_shard`` / ``revive_shard`` are the operator surface (a health
+    checker would drive them); with ``n_replicas > 1`` a killed primary
+    fails over to its replica before coverage degrades at all.
+    """
+
+    def __init__(self, sidx, params: SearchParams, mesh, *,
+                 shard_axes=("data",), query_axis=None,
+                 merge: str = "all_gather", quantized: bool = False,
+                 n_replicas: int = 1,
+                 config: ResilienceConfig = ResilienceConfig(),
+                 clock=time.monotonic, **kw):
+        from repro.core.distributed import (FaultTolerantShardedSearch,
+                                            ShardHealthRegistry)
+        super().__init__(sidx, params, config=config, clock=clock,
+                         engine="beam", backend="auto", **kw)
+        self.quantized = quantized          # ShardedIndex defeats isinstance
+        self.registry = ShardHealthRegistry(sidx.n_shards // n_replicas,
+                                            n_replicas)
+        merges = [merge]
+        other = "ring" if merge == "all_gather" else "all_gather"
+        if len(shard_axes) == 1 and other not in merges:
+            merges.append(other)
+        self._ft = {
+            m: FaultTolerantShardedSearch(
+                sidx, mesh, shard_axes=shard_axes, query_axis=query_axis,
+                merge=m, quantized=quantized, n_replicas=n_replicas,
+                registry=self.registry)
+            for m in merges
+        }
+        self.breaker = CircuitBreaker(
+            [("sharded", m) for m in merges],
+            threshold=config.breaker_threshold,
+            cooldown_s=config.breaker_cooldown_s, clock=clock)
+
+    # -- operator surface ----------------------------------------------------
+    def kill_shard(self, shard: int, replica: int = 0) -> None:
+        self.registry.mark_dead(shard, replica)
+
+    def revive_shard(self, shard: int, replica: int = 0) -> None:
+        self.registry.mark_live(shard, replica)
+
+    @property
+    def coverage(self) -> float:
+        return self.registry.coverage()
+
+    # -- search seam ---------------------------------------------------------
+    def _search(self, queries, params: Optional[SearchParams] = None,
+                engine: Optional[str] = None,
+                backend: Optional[str] = None):
+        params = params if params is not None else self.params
+        if engine is not None and engine != "sharded":
+            return super()._search(queries, params=params, engine=engine,
+                                   backend=backend)
+        merge = backend if backend in self._ft else next(iter(self._ft))
+        r = self._ft[merge](queries, params)
+        self._last_coverage = r.coverage
+        self._last_max_missed = r.max_missed
+        B = r.ids.shape[0]
+        zeros = jnp.zeros((B,), jnp.int32)
+        return SearchResult(ids=r.ids, dists=r.dists, n_dist_comps=zeros,
+                            n_approx_comps=zeros, n_hops=zeros,
+                            final_l=zeros, saturated=jnp.zeros((B,), bool),
+                            n_encounters=zeros)

@@ -1,9 +1,14 @@
 from .faults import (  # noqa: F401
     FaultPlan,
     KernelFault,
+    ShardDeathPlan,
+    SimulatedCrash,
+    crash_at,
     flip_bits,
     inject_search_faults,
+    inject_shard_deaths,
     make_torn_tmp,
     tamper_array,
     tear_checkpoint,
+    torn_wal_record,
 )

@@ -17,6 +17,16 @@ deterministic and seedable so CI reproduces exactly:
   verification specifically), ``tear_checkpoint`` (drop the manifest →
   invalid step), ``make_torn_tmp`` (a ``.tmp`` directory as left by a
   process killed mid-save).
+* **WAL crash points** — ``crash_at(point)`` builds the ``fault_hook`` a
+  ``JournaledLiveIndex`` accepts: raise ``SimulatedCrash`` at a named
+  protocol point (``before_journal`` / ``torn_journal`` / ``after_journal``
+  / ``mid_splice``), optionally only on the Nth visit.  ``torn_wal_record``
+  tears an already-committed record post-hoc (truncated payload +
+  checksum-stale manifest) — the shape a crash during a *later* append
+  leaves behind.
+* **Shard death** — ``ShardDeathPlan`` drives a
+  ``ShardHealthRegistry`` from a call schedule (kill shard s before call i,
+  revive at call j) so coverage-degradation sequences replay exactly.
 
 Nothing here is imported by production code paths — faults flow only
 test → harness → server seam.
@@ -51,6 +61,7 @@ class FaultPlan:
     fail_calls: tuple[int, ...] = ()
     match_engine: Optional[str] = None      # None → any engine
     match_backend: Optional[str] = None     # None → any backend
+    match_min_beam_width: Optional[int] = None  # only calls with W ≥ this
     exc_type: type = KernelFault
     latency_s: float = 0.0
     latency_calls: Optional[tuple[int, ...]] = None   # None → every call
@@ -85,11 +96,17 @@ class inject_search_faults:
         self.n_failed = 0
         self._orig = None
 
-    def _matches(self, engine: str, backend: str) -> bool:
-        return ((self.plan.match_engine is None
-                 or engine == self.plan.match_engine)
-                and (self.plan.match_backend is None
-                     or backend == self.plan.match_backend))
+    def _matches(self, engine: str, backend: str,
+                 beam_width: Optional[int] = None) -> bool:
+        p = self.plan
+        if p.match_engine is not None and engine != p.match_engine:
+            return False
+        if p.match_backend is not None and backend != p.match_backend:
+            return False
+        if (p.match_min_beam_width is not None and beam_width is not None
+                and beam_width < p.match_min_beam_width):
+            return False
+        return True
 
     def __enter__(self):
         self._orig = self.server._search
@@ -99,7 +116,8 @@ class inject_search_faults:
             self.n_calls += 1
             eng = engine if engine is not None else self.server.engine
             bck = backend if backend is not None else self.server.backend
-            if self._matches(eng, bck):
+            p = params if params is not None else self.server.params
+            if self._matches(eng, bck, getattr(p, "beam_width", None)):
                 idx = self.n_matched
                 self.n_matched += 1
                 delay = plan.delay_for(idx)
@@ -189,3 +207,117 @@ def make_torn_tmp(directory: str, step: int) -> str:
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         f.write(json.dumps({"step": step})[:-5])    # torn JSON
     return tmp
+
+
+# ---------------------------------------------------------------------------
+# WAL crash points (streaming-update journal).
+# ---------------------------------------------------------------------------
+
+
+class SimulatedCrash(RuntimeError):
+    """Raised by a crash hook — models the process dying at that point."""
+
+
+def crash_at(point: str, on_visit: int = 0):
+    """Build a ``fault_hook`` that raises ``SimulatedCrash`` the
+    ``on_visit``-th time the named protocol point is reached (other points
+    pass through).  The hook carries ``.visits`` for assertions."""
+    state = {"visits": 0}
+
+    def hook(p: str) -> None:
+        if p != point:
+            return
+        v = state["visits"]
+        state["visits"] += 1
+        if v == on_visit:
+            raise SimulatedCrash(f"crash at {point} (visit {v})")
+
+    hook.point = point
+    hook.state = state
+    return hook
+
+
+def torn_wal_record(wal_dir: str, seq: int, mode: str = "truncate") -> None:
+    """Corrupt an already-committed WAL record post-hoc.
+
+    ``mode="truncate"`` halves the payload npz (unreadable archive);
+    ``mode="checksum"`` rewrites the payload with one element perturbed
+    while the manifest keeps the stale CRC.  Either way ``wal_read`` must
+    raise ``WalCorruptError`` and replay must stop *before* this record.
+    """
+    base = os.path.join(wal_dir, f"wal_{seq:09d}")
+    npz = base + ".npz"
+    if mode == "truncate":
+        with open(npz, "rb") as f:
+            data = f.read()
+        with open(npz, "wb") as f:
+            f.write(data[: max(1, len(data) // 2)])
+    elif mode == "checksum":
+        with np.load(npz) as z:
+            flat = {k: z[k].copy() for k in z.files}
+        key = sorted(flat)[0]
+        arr = flat[key]
+        if arr.size == 0:
+            raise ValueError(f"array {key!r} empty, nothing to perturb")
+        if np.issubdtype(arr.dtype, np.floating):
+            arr.flat[0] += 1.0
+        else:
+            arr.flat[0] ^= 1
+        np.savez(npz, **flat)
+    else:
+        raise ValueError(f"unknown mode: {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# Shard death schedules (distributed serving).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ShardDeathPlan:
+    """Deterministic shard liveness schedule, applied before each call.
+
+    ``kill[(shard, replica)] = i`` kills that slot before the i-th call;
+    ``revive[(shard, replica)] = j`` revives it before the j-th call.
+    Drive it manually (``apply(registry, call_idx)``) or let
+    ``inject_shard_deaths`` hook a ``ShardedResilientAnnServer``.
+    """
+
+    kill: dict = dataclasses.field(default_factory=dict)
+    revive: dict = dataclasses.field(default_factory=dict)
+
+    def apply(self, registry, call_idx: int) -> None:
+        for (s, r), i in self.kill.items():
+            if call_idx >= i:
+                registry.mark_dead(s, r)
+        for (s, r), j in self.revive.items():
+            if call_idx >= j:
+                registry.mark_live(s, r)
+
+
+class inject_shard_deaths:
+    """Context manager applying a ``ShardDeathPlan`` around a sharded
+    server's ``_search`` seam (same wrapping discipline as
+    ``inject_search_faults``)."""
+
+    def __init__(self, server, plan: ShardDeathPlan):
+        self.server = server
+        self.plan = plan
+        self.n_calls = 0
+        self._orig = None
+
+    def __enter__(self):
+        self._orig = self.server._search
+
+        def wrapped(queries, params=None, engine=None, backend=None):
+            self.plan.apply(self.server.registry, self.n_calls)
+            self.n_calls += 1
+            return self._orig(queries, params=params, engine=engine,
+                              backend=backend)
+
+        self.server._search = wrapped
+        return self
+
+    def __exit__(self, *exc):
+        self.server._search = self._orig
+        return False

@@ -30,3 +30,13 @@ def recall_at_k(ids, gt_i, k):
         len(set(ids[i].tolist()) & set(gt_i[i, :k].tolist())) / k
         for i in range(ids.shape[0])
     ]))
+
+
+@pytest.fixture(scope="session")
+def fault_seed():
+    """Seed for the fault-injection suite.  CI sweeps REPRO_FAULT_SEED over a
+    matrix so deterministic fault schedules get exercised from several
+    starting states; locally it defaults to 0."""
+    import os
+
+    return int(os.environ.get("REPRO_FAULT_SEED", "0"))

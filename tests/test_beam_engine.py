@@ -130,6 +130,36 @@ def test_beam_fewer_dist_evals(graph, small_corpus):
             < np.asarray(r_legacy.n_dist_comps).mean())
 
 
+@pytest.mark.parametrize("mode", ["fixed", "adaptive"])
+def test_encounter_parity_w1(graph, small_corpus, mode):
+    """``n_encounters`` counts candidate *encounters* (valid neighbor slots
+    seen, pre-dedup) — unlike ``n_dist_comps`` it is independent of how
+    much the visited-set dedup saves, so at W=1 (identical expansion
+    schedules) the two engines must agree exactly.  This is the Exp-5
+    work metric; ``n_dist_comps`` alone undercounted beam-engine work
+    because the bitset dedup is stronger than the legacy ring buffer."""
+    q = jnp.asarray(small_corpus["queries"])
+    p = _params(mode, beam_width=1)
+    r_beam = search(graph, q, p)
+    r_legacy = legacy_search(graph, q, p)
+    np.testing.assert_array_equal(np.asarray(r_beam.n_encounters),
+                                  np.asarray(r_legacy.n_encounters))
+    # encounters are pre-dedup ⇒ can never be fewer than exact evaluations
+    assert (np.asarray(r_beam.n_encounters)
+            >= np.asarray(r_beam.n_dist_comps)).all()
+    assert (np.asarray(r_legacy.n_encounters)
+            >= np.asarray(r_legacy.n_dist_comps)).all()
+
+
+def test_probing_encounter_parity_w1(emqg, small_corpus):
+    q = jnp.asarray(small_corpus["queries"])
+    p = _params("fixed", beam_width=1)
+    r_beam = probing_search(emqg, q, p)
+    r_legacy = legacy_probing_search(emqg, q, p)
+    np.testing.assert_array_equal(np.asarray(r_beam.n_encounters),
+                                  np.asarray(r_legacy.n_encounters))
+
+
 def test_kernel_backends_match_jnp(graph, small_corpus):
     q = jnp.asarray(small_corpus["queries"][:8])
     p = SearchParams(k=5, l0=16, l_max=16, adaptive=False, max_hops=64,

@@ -138,3 +138,128 @@ assert cost.get("flops", 0) > 0
 print("OK", int(mem.temp_size_in_bytes), coll["total_operand_bytes"])
 """)
     assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Shard-loss tolerance: masked merges, coverage accounting, replica failover.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.faults
+def test_dead_shard_masked_merge_matches_survivor_reference():
+    """With 1 of S shards killed the response must carry coverage=(S-1)/S
+    and the merged ids must exactly equal the reference merge over the
+    surviving shards — for BOTH merge strategies — with no dead-shard id
+    leaking through."""
+    out = _run("""
+import os
+from repro.core import BuildParams, SearchParams
+from repro.core.distributed import (build_sharded, FaultTolerantShardedSearch,
+                                    host_reference_merge)
+seed = int(os.environ.get("REPRO_FAULT_SEED", "0"))
+rng = np.random.default_rng(seed)
+X = rng.normal(size=(512, 16)).astype(np.float32)
+Q = rng.normal(size=(8, 16)).astype(np.float32)
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+sidx = build_sharded(X, 4, BuildParams(max_degree=12, beam_width=24, t=8,
+                                       iters=1, block=512))
+params = SearchParams(k=5, l0=8, l_max=32, adaptive=False, max_hops=256)
+dead = int(rng.integers(0, 4))
+offs = np.append(np.asarray(sidx.offsets), sidx.n_total)
+for merge in ("all_gather", "ring"):
+    fts = FaultTolerantShardedSearch(sidx, mesh, merge=merge)
+    fts.registry.mark_dead(dead)
+    r = fts(jnp.asarray(Q), params)
+    assert abs(r.coverage - 3/4) < 1e-9, r.coverage
+    assert r.live_shards == 3 and r.n_shards == 4
+    assert r.max_missed == min(params.k, int(offs[dead+1] - offs[dead]))
+    ids = np.asarray(r.ids)
+    assert not (((ids >= offs[dead]) & (ids < offs[dead+1])).any())
+    ref_i, ref_d = host_reference_merge(sidx, fts.registry, jnp.asarray(Q),
+                                        params)
+    assert (ids == ref_i).all(), (merge, ids[0], ref_i[0])
+    np.testing.assert_allclose(np.asarray(r.dists), ref_d, rtol=1e-6)
+print("OK")
+""")
+    assert "OK" in out
+
+
+@pytest.mark.faults
+def test_replica_failover_restores_full_coverage():
+    """Losing a primary with a live replica must fail over (coverage stays
+    1.0, identical results); losing both degrades coverage; reviving
+    restores it."""
+    out = _run("""
+from repro.core import BuildParams, SearchParams
+from repro.core.distributed import build_replicated, FaultTolerantShardedSearch
+rng = np.random.default_rng(4)
+X = rng.normal(size=(512, 16)).astype(np.float32)
+Q = rng.normal(size=(8, 16)).astype(np.float32)
+mesh = jax.make_mesh((8,), ("data",))
+sidx = build_replicated(X, 4, 2, BuildParams(max_degree=12, beam_width=24,
+                                             t=8, iters=1, block=512))
+params = SearchParams(k=5, l0=8, l_max=32, adaptive=False, max_hops=256)
+fts = FaultTolerantShardedSearch(sidx, mesh, n_replicas=2)
+r0 = fts(jnp.asarray(Q), params)
+assert r0.coverage == 1.0 and r0.failover == 0
+fts.registry.mark_dead(1, replica=0)       # primary lost -> replica serves
+r1 = fts(jnp.asarray(Q), params)
+assert r1.coverage == 1.0 and r1.failover == 1 and r1.max_missed == 0
+assert (np.asarray(r0.ids) == np.asarray(r1.ids)).all()
+fts.registry.mark_dead(1, replica=1)       # replica lost too -> degrade
+r2 = fts(jnp.asarray(Q), params)
+assert abs(r2.coverage - 3/4) < 1e-9 and r2.max_missed == 5
+fts.registry.mark_live(1, replica=0)       # recovery
+r3 = fts(jnp.asarray(Q), params)
+assert r3.coverage == 1.0 and r3.failover == 0
+assert (np.asarray(r3.ids) == np.asarray(r0.ids)).all()
+print("OK")
+""")
+    assert "OK" in out
+
+
+@pytest.mark.faults
+def test_sharded_resilient_server_degrades_explicitly():
+    """The resilient server over a sharded index: shard death degrades
+    coverage per-response (never silently), a merge-tier fault falls back
+    to the other exact merge, and revival restores coverage=1.0."""
+    out = _run("""
+import os
+from repro.core import BuildParams, SearchParams
+from repro.serve import ResilienceConfig, ShardedResilientAnnServer
+from repro.testing import FaultPlan, inject_search_faults
+seed = int(os.environ.get("REPRO_FAULT_SEED", "0"))
+rng = np.random.default_rng(seed)
+X = rng.normal(size=(512, 16)).astype(np.float32)
+Q = rng.normal(size=(12, 16)).astype(np.float32)
+mesh = jax.make_mesh((4,), ("data",))
+from repro.core.distributed import build_sharded
+sidx = build_sharded(X, 4, BuildParams(max_degree=12, beam_width=24, t=8,
+                                       iters=1, block=512))
+params = SearchParams(k=5, l0=8, l_max=32, adaptive=False, max_hops=256,
+                      beam_width=1)
+srv = ShardedResilientAnnServer(sidx, params, mesh,
+                                config=ResilienceConfig(backoff_s=0.0))
+srv.submit_many(Q)
+rs = srv.drain()
+assert all(r.ok and r.coverage == 1.0 and r.max_missed == 0 for r in rs)
+assert all(r.tier == "sharded/all_gather" for r in rs)
+
+srv.kill_shard(2)                          # shard death: explicit degradation
+srv.submit_many(Q)
+rs = srv.drain()
+assert all(r.ok and abs(r.coverage - 3/4) < 1e-9 and r.max_missed == 5
+           for r in rs)
+
+srv.revive_shard(2)                        # merge-time collective fault:
+with inject_search_faults(                 # primary merge tier opens,
+        srv, FaultPlan(fail_first=10**6,   # the other exact merge serves
+                       match_backend="all_gather")) as inj:
+    srv.submit_many(Q)
+    rs = srv.drain()
+assert inj.n_failed >= 1
+assert all(r.ok and r.tier == "sharded/ring" and r.coverage == 1.0
+           for r in rs)
+print("OK")
+""")
+    assert "OK" in out

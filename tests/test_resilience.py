@@ -12,7 +12,9 @@ import time
 import numpy as np
 import pytest
 
-from repro.core import SearchParams, build_exact, legacy_search
+import dataclasses
+
+from repro.core import SearchParams, build_exact, legacy_search, search
 from repro.serve import (
     AnnServer,
     CircuitBreaker,
@@ -244,13 +246,40 @@ def test_transient_fault_retried_same_tier(tiny):
 
 
 @pytest.mark.faults
-def test_persistent_kernel_fault_falls_back_to_legacy(tiny):
-    """A dead beam engine (e.g. broken Pallas lowering) must open the
-    breaker and route traffic to the legacy per-query engine — with results
-    identical to calling that engine directly, and zero failed requests."""
+def test_persistent_kernel_fault_falls_back_to_single_beam(tiny):
+    """A fault that kills every wide-beam configuration (e.g. a broken
+    multi-row gather kernel) must walk the breaker down to the last-resort
+    ``(beam, jnp, W=1)`` tier — greedy best-first on the production engine,
+    with results identical to calling it directly, and zero failed
+    requests.  The legacy engine must NOT appear: it is opt-in only."""
     srv = ResilientAnnServer(
         tiny["graph"], PARAMS,
         config=fast_cfg(breaker_threshold=2), max_batch=8, buckets=(8,))
+    qs = tiny["queries"][:16]
+    with inject_search_faults(
+            srv, FaultPlan(fail_first=10**6, match_engine="beam",
+                           match_min_beam_width=2)) as inj:
+        srv.submit_many(qs)
+        rs = srv.drain()
+    assert inj.n_failed >= 2
+    assert all(r.ok for r in rs) and srv.stats.n_failed == 0
+    assert srv.stats.n_fallback >= 1
+    assert all(r.tier == "beam/jnp/w1" for r in rs)
+    ref = search(tiny["graph"], jnp.asarray(qs),
+                 dataclasses.replace(srv.ladder.params(srv.rung),
+                                     beam_width=1), backend="jnp")
+    np.testing.assert_array_equal(
+        np.stack([r.ids for r in rs]), np.asarray(ref.ids))
+
+
+@pytest.mark.faults
+def test_legacy_fallback_is_opt_in(tiny):
+    """With ``legacy_fallback=True`` (and only then) a fault that kills the
+    beam engine entirely routes traffic to the legacy per-query engine."""
+    srv = ResilientAnnServer(
+        tiny["graph"], PARAMS,
+        config=fast_cfg(breaker_threshold=2, legacy_fallback=True),
+        max_batch=8, buckets=(8,))
     qs = tiny["queries"][:16]
     with inject_search_faults(
             srv, FaultPlan(fail_first=10**6, match_engine="beam")) as inj:
@@ -258,7 +287,6 @@ def test_persistent_kernel_fault_falls_back_to_legacy(tiny):
         rs = srv.drain()
     assert inj.n_failed >= 2
     assert all(r.ok for r in rs) and srv.stats.n_failed == 0
-    assert srv.stats.n_fallback >= 1
     assert all(r.tier == "legacy/auto" for r in rs)
     ref = legacy_search(tiny["graph"], jnp.asarray(qs),
                         srv.ladder.params(srv.rung))
@@ -303,7 +331,11 @@ def test_circuit_breaker_half_open_recovery():
 
 def test_default_tiers_chain():
     assert default_tiers("beam", "auto") == \
-        [("beam", "auto"), ("beam", "jnp"), ("legacy", "auto")]
+        [("beam", "auto", None), ("beam", "jnp", None), ("beam", "jnp", 1)]
     assert default_tiers("beam", "jnp") == \
-        [("beam", "jnp"), ("legacy", "auto")]
-    assert default_tiers("legacy", "auto") == [("legacy", "auto")]
+        [("beam", "jnp", None), ("beam", "jnp", 1)]
+    assert default_tiers("legacy", "auto") == [("legacy", "auto", None)]
+    # the legacy per-query engine joins the chain only by explicit opt-in
+    assert default_tiers("beam", "auto", include_legacy=True)[-1] == \
+        ("legacy", "auto", None)
+    assert ("legacy", "auto", None) not in default_tiers("beam", "auto")

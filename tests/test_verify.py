@@ -1,0 +1,128 @@
+"""Graph-invariant auditor: clean indexes pass, each corruption class is
+caught as the right violation, and the serve CLI surfaces it via --audit."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BuildParams, build_approx
+from repro.core.updates import as_live, delete, insert
+from repro.core.verify import audit, audit_live
+
+BP = BuildParams(max_degree=10, beam_width=20, t=10, iters=2, block=128)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    rng = np.random.default_rng(5)
+    return build_approx(rng.standard_normal((200, 10)).astype(np.float32), BP)
+
+
+def _with_neighbors(graph, nbr):
+    return dataclasses.replace(graph, neighbors=jnp.asarray(nbr))
+
+
+def test_clean_graph_passes(graph):
+    rep = audit(graph)
+    assert rep.ok, rep.summary()
+    assert rep.n_live == rep.n == 200
+    assert rep.metrics["n_unreachable_live"] == 0
+    assert rep.metrics["monotone_failures"] <= 3   # ≤ tol on an approx build
+
+
+def test_mutated_live_index_passes(graph):
+    live = as_live(graph, BP)
+    live = insert(live, np.random.default_rng(6)
+                  .standard_normal((15, 10)).astype(np.float32))
+    live = delete(live, [2, 8, 31])
+    rep = audit_live(live)
+    assert rep.ok, rep.summary()
+    assert rep.n_live == 215 - 3
+
+
+def test_out_of_range_ids_flagged(graph):
+    nbr = np.asarray(graph.neighbors).copy()
+    nbr[3, 0] = graph.n + 50
+    rep = audit(_with_neighbors(graph, nbr))
+    assert not rep.ok
+    assert any("out of range" in v for v in rep.violations)
+
+
+def test_self_loops_and_duplicates_flagged(graph):
+    nbr = np.asarray(graph.neighbors).copy()
+    nbr[4, 0] = 4                                  # self loop
+    nbr[5, 1] = nbr[5, 0]                          # duplicate edge
+    rep = audit(_with_neighbors(graph, nbr))
+    assert any("self-loop" in v for v in rep.violations)
+    assert any("duplicate" in v for v in rep.violations)
+
+
+def test_unreachable_live_node_flagged(graph):
+    nbr = np.asarray(graph.neighbors).copy()
+    victim = (int(np.asarray(graph.medoid)) + 1) % graph.n
+    nbr[nbr == victim] = -1                        # sever every in-edge
+    rep = audit(_with_neighbors(graph, nbr))
+    assert not rep.ok
+    assert any("unreachable" in v for v in rep.violations)
+
+
+def test_isolated_live_node_flagged(graph):
+    nbr = np.asarray(graph.neighbors).copy()
+    victim = (int(np.asarray(graph.medoid)) + 1) % graph.n
+    nbr[victim, :] = -1
+    nbr[nbr == victim] = -1
+    rep = audit(_with_neighbors(graph, nbr))
+    assert any("isolated" in v for v in rep.violations)
+
+
+def test_tombstoned_medoid_flagged(graph):
+    tomb = np.zeros(graph.n, bool)
+    tomb[int(np.asarray(graph.medoid))] = True
+    rep = audit(graph, tombstones=tomb)
+    assert any("medoid" in v and "tombstoned" in v for v in rep.violations)
+
+
+def test_tombstone_bitmap_shape_flagged(graph):
+    rep = audit(graph, tombstones=np.zeros(graph.n - 1, bool))
+    assert any("bitmap shape" in v for v in rep.violations)
+
+
+def test_broken_routing_flagged_by_monotone_probe(graph):
+    """Rewiring every node to the same few targets keeps the graph fully
+    reachable (those hubs point back) yet destroys monotone descent — only
+    the sampled probe catches this class of defect."""
+    n = graph.n
+    nbr = np.full_like(np.asarray(graph.neighbors), -1)
+    hubs = [int(np.asarray(graph.medoid)), (int(np.asarray(graph.medoid))
+                                            + 1) % n]
+    for i in range(n):
+        nbr[i, 0] = hubs[0] if i != hubs[0] else hubs[1]
+        nbr[i, 1] = hubs[1] if i != hubs[1] else (hubs[1] + 1) % n
+    nbr[hubs[0], : graph.max_degree] = \
+        [i for i in range(n) if i != hubs[0]][: graph.max_degree]
+    rep = audit(_with_neighbors(graph, nbr))
+    assert not rep.ok
+    assert any("monotone" in v or "unreachable" in v for v in rep.violations)
+
+
+def test_summary_mentions_violations(graph):
+    nbr = np.asarray(graph.neighbors).copy()
+    nbr[0, 0] = 0
+    rep = audit(_with_neighbors(graph, nbr))
+    text = rep.summary()
+    assert "VIOLATION" in text and "self-loop" in text
+
+
+def test_serve_cli_audit_flag():
+    import subprocess
+    import sys
+
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--n", "400", "--dim",
+         "16", "--queries", "32", "--audit"],
+        capture_output=True, text=True, timeout=560, cwd="/root/repo",
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"})
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "[audit]" in proc.stdout and "OK" in proc.stdout

@@ -1,0 +1,249 @@
+"""Crash-safe streaming updates: WAL commit protocol, crash-point sweep,
+recovery bit-identity, and consolidation under fault injection.
+
+The contract under test: a mutation is visible after recovery iff its WAL
+record was *committed* (manifest written) before the crash — crashes at
+``before_journal`` / ``torn_journal`` recover to the state WITHOUT the op,
+crashes at ``after_journal`` / ``mid_splice`` recover to the state WITH it
+(even though the in-memory index died half-mutated) — and recovery is
+bit-for-bit identical to an uninterrupted run of the same committed op
+sequence, certified by the graph-invariant auditor.
+
+Marked ``faults``: CI runs this module under a pytest-timeout ceiling and
+sweeps ``REPRO_FAULT_SEED`` (the ``fault_seed`` fixture) across a matrix.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.build_approx import BuildParams, build_approx
+from repro.core import updates as U
+from repro.core.updates import (
+    JournaledLiveIndex,
+    WalCorruptError,
+    recover,
+    wal_read,
+    wal_seqs,
+)
+from repro.core.verify import audit_live
+from repro.testing import SimulatedCrash, crash_at, torn_wal_record
+
+pytestmark = pytest.mark.faults
+
+BP = BuildParams(max_degree=10, beam_width=20, t=10, iters=1, block=128)
+CRASH_POINTS = ("before_journal", "torn_journal", "after_journal",
+                "mid_splice")
+
+
+@pytest.fixture(scope="module")
+def base_live():
+    rng = np.random.default_rng(3)
+    X = rng.standard_normal((220, 12)).astype(np.float32)
+    return U.as_live(build_approx(X, BP), BP)
+
+
+def _batch(seed, m=12, d=12):
+    return np.random.default_rng(seed).standard_normal((m, d)) \
+        .astype(np.float32)
+
+
+def _state(live):
+    g = live.graph
+    return (np.asarray(g.vectors), np.asarray(g.neighbors),
+            int(np.asarray(g.medoid)), live.tombstones.copy())
+
+
+def _assert_bit_identical(a, b):
+    va, na, ma, ta = _state(a)
+    vb, nb, mb, tb = _state(b)
+    np.testing.assert_array_equal(va, vb)
+    np.testing.assert_array_equal(na, nb)
+    assert ma == mb
+    np.testing.assert_array_equal(ta, tb)
+
+
+# ---------------------------------------------------------------------------
+# Round trips without crashes.
+# ---------------------------------------------------------------------------
+
+
+def test_recover_bit_identical_after_clean_run(base_live, tmp_path,
+                                               fault_seed):
+    j = JournaledLiveIndex.create(base_live, str(tmp_path))
+    j.insert(_batch(fault_seed))
+    j.delete([1, 4, 9])
+    j.insert(_batch(fault_seed + 1))
+    j2, info = recover(str(tmp_path))
+    assert info["replayed"] == 3 and info["torn_seq"] is None
+    assert j2.seq == j.seq == 3
+    _assert_bit_identical(j.live, j2.live)
+    assert audit_live(j2.live).ok
+
+
+def test_checkpoint_bounds_replay_and_truncates_wal(base_live, tmp_path,
+                                                    fault_seed):
+    j = JournaledLiveIndex.create(base_live, str(tmp_path),
+                                  keep_checkpoints=1)
+    j.insert(_batch(fault_seed))
+    j.delete([0, 2])
+    j.checkpoint()
+    # records covered by the only retained checkpoint must be gone
+    assert wal_seqs(j.wal_dir) == []
+    j.insert(_batch(fault_seed + 2))
+    j2, info = recover(str(tmp_path))
+    assert info["checkpoint_step"] == 2 and info["replayed"] == 1
+    _assert_bit_identical(j.live, j2.live)
+    assert audit_live(j2.live).ok
+
+
+# ---------------------------------------------------------------------------
+# Crash-point sweep: every protocol point, both outcome classes.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("point", CRASH_POINTS)
+@pytest.mark.parametrize("op", ["insert", "delete"])
+def test_crash_point_sweep(base_live, tmp_path, fault_seed, point, op):
+    """Kill the process at ``point`` during op #2 and recover.  The WAL
+    semantics decide whether op #2 survives: committed (manifest on disk —
+    ``after_journal`` / ``mid_splice``) means replayed, uncommitted
+    (``before_journal`` / ``torn_journal``) means it never happened."""
+    if op == "delete" and point == "mid_splice":
+        pytest.skip("mid_splice is an insert-path fault point")
+    d = str(tmp_path)
+    j = JournaledLiveIndex.create(base_live, d)
+    j.insert(_batch(fault_seed))         # op #1, committed
+    pre_crash = j.live                   # state without op #2
+
+    # oracle: the same op applied on an uninterrupted copy
+    if op == "insert":
+        payload = _batch(fault_seed + 7)
+        oracle = U.insert(pre_crash, payload)
+    else:
+        payload = [3, 5]
+        oracle = U.delete(pre_crash, payload)
+
+    j.fault_hook = crash_at(point)
+    with pytest.raises(SimulatedCrash):
+        (j.insert if op == "insert" else j.delete)(payload)
+    del j                                # the process is dead; only disk survives
+
+    j2, info = recover(d)
+    committed = point in ("after_journal", "mid_splice")
+    if committed:
+        assert info["replayed"] == 2
+        assert j2.seq == 2
+        _assert_bit_identical(j2.live, oracle)
+    else:
+        assert info["replayed"] == 1
+        assert j2.seq == 1
+        _assert_bit_identical(j2.live, pre_crash)
+    if point == "torn_journal":          # payload without manifest on disk
+        assert info["torn_seq"] == 2
+        with pytest.raises(WalCorruptError):
+            wal_read(j2.wal_dir, 2)
+    rep = audit_live(j2.live)
+    assert rep.ok, rep.summary()
+
+    # the recovered journal must accept new mutations and stay recoverable
+    j2.insert(_batch(fault_seed + 13))
+    j3, _ = recover(d)
+    _assert_bit_identical(j2.live, j3.live)
+
+
+@pytest.mark.parametrize("mode", ["truncate", "checksum"])
+def test_torn_record_detected_post_hoc(base_live, tmp_path, fault_seed,
+                                       mode):
+    """A record torn *after* commit (disk corruption) must stop replay at
+    the preceding op, not crash recovery or replay garbage."""
+    d = str(tmp_path)
+    j = JournaledLiveIndex.create(base_live, d)
+    j.insert(_batch(fault_seed))
+    after_one = j.live
+    j.delete([2, 6])
+    torn_wal_record(j.wal_dir, 2, mode=mode)
+    j2, info = recover(d)
+    assert info["replayed"] == 1 and info["torn_seq"] == 2
+    _assert_bit_identical(j2.live, after_one)
+    assert audit_live(j2.live).ok
+
+
+# ---------------------------------------------------------------------------
+# Consolidation under fault injection (satellite).
+# ---------------------------------------------------------------------------
+
+
+def test_consolidate_frac_crossing_mid_stream(base_live, tmp_path,
+                                              fault_seed):
+    """Deletes that push the tombstone fraction past ``consolidate_frac``
+    mid-stream must auto-consolidate, journal the consolidate as its own
+    record, and leave a recoverable, audit-clean index."""
+    d = str(tmp_path)
+    j = JournaledLiveIndex.create(base_live, d, consolidate_frac=0.15)
+    n = j.live.graph.n
+    rng = np.random.default_rng(fault_seed)
+    ids = rng.choice(n, size=int(0.2 * n), replace=False)
+    for chunk in np.array_split(ids, 4):
+        j.delete(chunk)
+        rep = audit_live(j.live)
+        assert rep.ok, rep.summary()
+    ops = [wal_read(j.wal_dir, s)[0] for s in wal_seqs(j.wal_dir)]
+    assert "consolidate" in ops          # journaled as its own record
+    assert j.live.frac_deleted <= 0.15
+    j2, info = recover(d)
+    assert info["replayed"] == len(ops)
+    _assert_bit_identical(j.live, j2.live)
+    assert audit_live(j2.live).ok
+
+
+def test_crash_during_auto_consolidate(base_live, tmp_path, fault_seed):
+    """The auto-consolidate is a *separate* record: crashing before its
+    journal commit recovers the deletes but not the consolidate (replay
+    applies pure records, it never re-derives triggers)."""
+    d = str(tmp_path)
+    j = JournaledLiveIndex.create(base_live, d, consolidate_frac=0.1)
+    n = j.live.graph.n
+    ids = np.random.default_rng(fault_seed).choice(
+        n, size=int(0.15 * n), replace=False)
+    # visit 0 of before_journal is the delete itself; visit 1 the consolidate
+    j.fault_hook = crash_at("before_journal", on_visit=1)
+    with pytest.raises(SimulatedCrash):
+        j.delete(ids)
+    del j
+    j2, info = recover(d)
+    assert info["replayed"] == 1
+    assert [wal_read(j2.wal_dir, s)[0] for s in wal_seqs(j2.wal_dir)] \
+        == ["delete"]
+    assert j2.live.frac_deleted > 0.1    # deletes survived, consolidate didn't
+    assert audit_live(j2.live).ok
+    # the recovered journal consolidates on its next trigger as usual
+    j2.fault_hook = None
+    j2.delete([int(np.where(~j2.live.tombstones)[0][0])])
+    assert j2.live.frac_deleted <= 0.1
+    assert audit_live(j2.live).ok
+
+
+def test_delete_then_reinsert_same_row(base_live, tmp_path, fault_seed):
+    """Deleting a row and re-inserting its exact vector must serve the new
+    copy (distance 0), stay consistent through consolidate, and recover
+    bit-identically."""
+    d = str(tmp_path)
+    j = JournaledLiveIndex.create(base_live, d, consolidate_frac=0.9)
+    victim = 17
+    v = np.asarray(j.live.graph.vectors)[victim].copy()
+    j.delete([victim])
+    res = j.search(v[None], k=1)
+    ids = np.asarray(res.ids)
+    assert ids[0, 0] != victim           # tombstone filtered from results
+    j.insert(v[None])
+    res = j.search(v[None], k=1)
+    assert float(np.asarray(res.dists)[0, 0]) <= 1e-6
+    assert not j.live.tombstones[int(np.asarray(res.ids)[0, 0])]
+    j.consolidate()                      # splices the dead original out
+    rep = audit_live(j.live)
+    assert rep.ok, rep.summary()
+    res = j.search(v[None], k=1)
+    assert float(np.asarray(res.dists)[0, 0]) <= 1e-6
+    j2, _ = recover(d)
+    _assert_bit_identical(j.live, j2.live)
+    assert audit_live(j2.live).ok
