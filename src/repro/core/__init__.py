@@ -8,8 +8,9 @@ Public API:
                        probing_search / error_bounded_probing_search (Alg. 5),
                        ags_search (ablation).  All route through the
                        batch-level beam engine (SearchParams.beam_width);
-                       legacy_search / legacy_probing_search are the seed
-                       per-query engines kept as parity oracles.
+                       correctness is certified by implementation-independent
+                       oracles (repro.testing.oracle: brute-force exact k-NN
+                       plus the paper's (1/δ) bound), not a reference engine.
     Distribution:      build_sharded, build_replicated, make_sharded_search,
                        ShardHealthRegistry, FaultTolerantShardedSearch
     Maintenance:       updates.JournaledLiveIndex (WAL + crash recovery),
@@ -31,7 +32,6 @@ from .emqg import build_emqg, from_graph, memory_footprint  # noqa: F401
 from .search import (  # noqa: F401
     error_bounded_search,
     greedy_search,
-    legacy_search,
     local_optimum_mask,
     make_batch_dist_fn,
     search,
@@ -40,7 +40,6 @@ from .search import (  # noqa: F401
 from .probing import (  # noqa: F401
     ags_search,
     error_bounded_probing_search,
-    legacy_probing_search,
     probing_search,
 )
 from . import baselines, bitset, distances, distributed, geometry, rabitq  # noqa: F401

@@ -1,17 +1,22 @@
 """Packed uint32 visited bitsets for lock-step graph traversal.
 
-The legacy per-query engines dedup against a ``max_hops``-wide ring buffer of
-expanded ids — every neighbor is broadcast-compared against the whole ring,
-an O(M·T) wall per hop (T = 2048 for the adaptive engines).  A packed bitset
-over the node-id space makes membership O(1) per neighbor and costs
+The seed's per-query engines deduped against a ``max_hops``-wide ring buffer
+of expanded ids — every neighbor was broadcast-compared against the whole
+ring, an O(M·T) wall per hop (T = 2048 for the adaptive engines).  A packed
+bitset over the node-id space makes membership O(1) per neighbor and costs
 ``ceil(n/32)·4`` bytes per query: 125 KiB for SIFT1M, which for a 64-query
 batch is 8 MiB of HBM — noise next to the vectors themselves.
 
 Layout: bit ``j`` of word ``w`` in row ``b`` ⇔ node ``32·w + j`` seen by
 query ``b``.  All helpers take fixed-shape ``int32`` id arrays padded with
-``INVALID_ID`` (negative); invalid slots never test positive and never set a
-bit, so the helpers compose with the masked lock-step state machines without
-extra branching.
+``INVALID_ID`` (negative); invalid slots never test positive and never set
+or clear a bit, so the helpers compose with the masked lock-step state
+machines without extra branching.
+
+``bitset_clear`` is the inverse of ``bitset_set`` and exists for the literal
+Algorithm-3 prune (``faithful_prune=True``): a candidate pruned out of the
+top-(l+1) window before it was ever expanded must be able to *re-enter* the
+search once ``l`` grows, so its visited bit is cleared when it is pruned.
 """
 
 from __future__ import annotations
@@ -61,6 +66,25 @@ def bitset_set(bits: jax.Array, ids: jax.Array) -> jax.Array:
     rows = jnp.arange(bits.shape[0], dtype=jnp.int32)[:, None]
     delta = delta.at[rows, word].add(mask, mode="drop")
     return bits | delta
+
+
+def bitset_clear(bits: jax.Array, ids: jax.Array) -> jax.Array:
+    """Clear the bits for ``ids`` (must be unique per row among valid entries).
+
+    Exact inverse of ``bitset_set`` under the same uniqueness precondition:
+    the scatter-add accumulates one-bit masks that never carry, and the
+    result is and-not-ed out of ``bits``.  Invalid (negative) ids are routed
+    out of bounds and dropped; clearing a bit that was never set is a no-op.
+    """
+    nw = bits.shape[1]
+    word = jnp.where(ids >= 0, ids >> 5, nw)        # invalid → OOB, dropped
+    mask = jnp.where(
+        ids >= 0, jnp.uint32(1) << (ids & 31).astype(jnp.uint32), jnp.uint32(0)
+    )
+    delta = jnp.zeros_like(bits)
+    rows = jnp.arange(bits.shape[0], dtype=jnp.int32)[:, None]
+    delta = delta.at[rows, word].add(mask, mode="drop")
+    return bits & ~delta
 
 
 def unique_per_row(ids: jax.Array, fresh: jax.Array) -> jax.Array:

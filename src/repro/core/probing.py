@@ -6,31 +6,29 @@ promotes the best approximate candidate to the exact tier only when the
 exact frontier has stopped improving.  The adaptive outer-``l`` loop and the
 α stop rule are inherited from Algorithm 3 and apply to the exact tier.
 
-Like ``search.py``, two engines:
+``probing_search`` is the batch-level beam engine — the only Algorithm-5
+engine in the repo.  One ``while_loop`` drives the whole batch; per iteration
+each query either *probes* its ``beam_width`` best unprobed approximate
+candidates (their exact distances are evaluated in one fused gather+L2 call
+over ``[B, W]`` ids) or *expands* its W best unvisited exact candidates
+(``B×W×M`` neighbor ids deduped against a packed visited bitset, approximate
+distances in one batched RaBitQ estimate).  The NeedProbing rule
+(lines 22-28) decides per query; finished queries are masked no-ops.
 
-``probing_search``        — the batch-level beam engine.  One ``while_loop``
-                            drives the whole batch; per iteration each query
-                            either *probes* its ``beam_width`` best unprobed
-                            approximate candidates (their exact distances are
-                            evaluated in one fused gather+L2 call over
-                            ``[B, W]`` ids) or *expands* its W best unvisited
-                            exact candidates (``B×W×M`` neighbor ids deduped
-                            against a packed visited bitset, approximate
-                            distances in one batched RaBitQ estimate).  The
-                            NeedProbing rule (lines 22-28) decides per query;
-                            finished queries are masked no-ops.
-
-``legacy_probing_search`` — the seed per-query engine (``vmap`` over a
-                            per-query ``while_loop``, one op per hop,
-                            ring-buffer dedup).  Parity oracle.
-
-Fixed-shape state (either engine):
+Fixed-shape state:
 
   C_e — exact candidates  (ids, exact d², visited flags)   cap l_max+1
   C_a — approx candidates (ids, approx d², probed flags)   cap l_max+1
 
 Also provides AGS (approximate greedy search + exact rerank — SymphonyQG's
-search, the paper's δ-EMQG-AGS ablation).
+search, the paper's δ-EMQG-AGS ablation), built on the same batch engine:
+the generic ``_beam_search_batch`` traversal runs with a RaBitQ approximate
+``batch_dist``, then one fused exact gather+L2 call reranks the final
+candidate buffers.
+
+Correctness is checked against implementation-independent oracles — brute
+force exact k-NN plus the paper's ``(1/δ)`` bound (``repro.testing.oracle``,
+``tests/test_conformance.py``) — not a reference engine.
 """
 
 from __future__ import annotations
@@ -44,12 +42,10 @@ import jax.numpy as jnp
 from . import rabitq
 from .bitset import bitset_make, bitset_set, bitset_test, unique_per_row
 from .search import (
-    _merge_topc,
-    _search_one,
+    _beam_search_batch,
     adaptive_transition,
     batch_merge_topc,
     make_batch_dist_fn,
-    make_exact_dist_fn,
     resolve_beam_width,
     select_top_w,
 )
@@ -250,188 +246,6 @@ def probing_search(
     return res
 
 
-# ---------------------------------------------------------------------------
-# Legacy per-query engine (parity oracle — see module docstring).
-# ---------------------------------------------------------------------------
-
-
-class _PState(NamedTuple):
-    ce_ids: jax.Array
-    ce_d2: jax.Array
-    ce_vis: jax.Array
-    ca_ids: jax.Array
-    ca_d2: jax.Array
-    ca_prb: jax.Array
-    t_ids: jax.Array
-    t_cnt: jax.Array
-    d2_last: jax.Array
-    l: jax.Array
-    n_dist: jax.Array
-    n_approx: jax.Array
-    n_enc: jax.Array
-    n_hops: jax.Array
-    done: jax.Array
-    saturated: jax.Array
-
-
-def _probing_one(neighbors, exact_fn, approx_fn, q, ctx, start, p: SearchParams):
-    C = p.l_max + 1
-    T = 2 * p.max_hops  # both tiers feed the ring
-
-    d2_s = exact_fn(q, start[None])[0]
-    st = _PState(
-        ce_ids=jnp.full((C,), INVALID_ID, jnp.int32).at[0].set(start),
-        ce_d2=jnp.full((C,), jnp.inf, jnp.float32).at[0].set(d2_s),
-        ce_vis=jnp.zeros((C,), jnp.bool_),
-        ca_ids=jnp.full((C,), INVALID_ID, jnp.int32),
-        ca_d2=jnp.full((C,), jnp.inf, jnp.float32),
-        ca_prb=jnp.zeros((C,), jnp.bool_),
-        t_ids=jnp.full((T,), INVALID_ID, jnp.int32).at[0].set(start),
-        t_cnt=jnp.int32(1),
-        d2_last=d2_s,
-        l=jnp.int32(min(max(p.l0, p.k), p.l_max)),
-        n_dist=jnp.int32(1),
-        n_approx=jnp.int32(0),
-        n_enc=jnp.int32(1),
-        n_hops=jnp.int32(0),
-        done=jnp.bool_(False),
-        saturated=jnp.bool_(False),
-    )
-    pos = jnp.arange(C, dtype=jnp.int32)
-    alpha2 = jnp.float32(p.alpha * p.alpha)
-
-    def best_unvisited(ids, d2, vis, l):
-        mask = (pos < l) & (ids >= 0) & (~vis)
-        sel = jnp.argmin(jnp.where(mask, d2, jnp.inf))
-        has = jnp.any(mask)
-        return has, sel
-
-    def cond(s: _PState):
-        return (~s.done) & (s.n_hops < p.max_hops)
-
-    def expand(s: _PState, sel_u) -> _PState:
-        """Line 13-16: expand u with approximate distances into C_a."""
-        u_id = s.ce_ids[sel_u]
-        d2_u = s.ce_d2[sel_u]
-        ce_vis = s.ce_vis.at[sel_u].set(True)
-        nbrs = jnp.take(neighbors, jnp.maximum(u_id, 0), axis=0)
-        valid = nbrs >= 0
-        in_t = jnp.any(nbrs[:, None] == s.t_ids[None, :], axis=1)
-        in_ca = jnp.any(nbrs[:, None] == s.ca_ids[None, :], axis=1)
-        fresh = valid & ~in_t & ~in_ca
-        d2a = approx_fn(ctx, jnp.where(fresh, nbrs, INVALID_ID))
-        n_approx = s.n_approx + jnp.sum(fresh).astype(jnp.int32)
-        ca_ids, ca_d2, ca_prb = _merge_topc(
-            s.ca_ids, s.ca_d2, s.ca_prb,
-            jnp.where(fresh, nbrs, INVALID_ID),
-            jnp.where(fresh, d2a, jnp.inf),
-            jnp.zeros_like(fresh), C,
-        )
-        return s._replace(ce_vis=ce_vis, ca_ids=ca_ids, ca_d2=ca_d2,
-                          ca_prb=ca_prb, d2_last=d2_u, n_approx=n_approx,
-                          n_enc=s.n_enc + jnp.sum(valid).astype(jnp.int32),
-                          n_hops=s.n_hops + 1)
-
-    def probe(s: _PState, sel_w) -> _PState:
-        """Line 9-11: compute the exact distance of w, promote to C_e."""
-        w_id = s.ca_ids[sel_w]
-        ca_prb = s.ca_prb.at[sel_w].set(True)
-        t_ids = s.t_ids.at[s.t_cnt % T].set(w_id)
-        t_cnt = s.t_cnt + 1
-        d2_w = exact_fn(q, w_id[None])[0]
-        one_id = jnp.full((1,), 0, jnp.int32).at[0].set(w_id)
-        ce_ids, ce_d2, ce_vis = _merge_topc(
-            s.ce_ids, s.ce_d2, s.ce_vis,
-            one_id, d2_w[None], jnp.zeros((1,), jnp.bool_), C,
-        )
-        return s._replace(ce_ids=ce_ids, ce_d2=ce_d2, ce_vis=ce_vis,
-                          ca_prb=ca_prb, t_ids=t_ids, t_cnt=t_cnt,
-                          n_dist=s.n_dist + 1, n_enc=s.n_enc + 1,
-                          n_hops=s.n_hops + 1)
-
-    def converged(s: _PState) -> _PState:
-        if not p.adaptive:
-            return s._replace(done=jnp.bool_(True))
-        d2_l = s.ce_d2[jnp.minimum(s.l - 1, C - 1)]
-        d2_k = s.ce_d2[p.k - 1]
-        stop = d2_l >= alpha2 * d2_k
-        at_cap = s.l >= p.l_max
-        return s._replace(
-            l=jnp.where(stop, s.l, jnp.minimum(s.l + p.l_step, p.l_max)),
-            done=stop | at_cap,
-            saturated=s.saturated | (at_cap & ~stop),
-        )
-
-    def body(s: _PState) -> _PState:
-        has_u, sel_u = best_unvisited(s.ce_ids, s.ce_d2, s.ce_vis, s.l)
-        has_w, sel_w = best_unvisited(s.ca_ids, s.ca_d2, s.ca_prb, s.l)
-        d2_u = jnp.where(has_u, s.ce_d2[sel_u], jnp.inf)
-        d2_w = jnp.where(has_w, s.ca_d2[sel_w], jnp.inf)
-        # NeedProbing (lines 22-28)
-        need_probe = jnp.where(
-            ~has_u,
-            has_w,
-            (d2_u > s.d2_last) & has_w & (d2_w < d2_u),
-        )
-        exhausted = ~has_u & ~has_w
-
-        def do_converged(s):
-            return converged(s)
-
-        def do_step(s):
-            return jax.lax.cond(
-                need_probe, lambda s_: probe(s_, sel_w), lambda s_: expand(s_, sel_u), s
-            )
-
-        return jax.lax.cond(exhausted, do_converged, do_step, s)
-
-    return jax.lax.while_loop(cond, body, st)
-
-
-@partial(jax.jit, static_argnames=("params", "use_kernel", "with_candidates"))
-def legacy_probing_search(
-    index: EMQGIndex,
-    queries: jax.Array,
-    params: SearchParams,
-    start: Optional[jax.Array] = None,
-    use_kernel: bool = False,
-    with_candidates: bool = False,
-):
-    """Seed per-query Algorithm 5 engine.  Parity oracle for
-    ``probing_search``; not on any hot path."""
-    B = queries.shape[0]
-    g, codes = index.graph, index.codes
-    if start is None:
-        start = jnp.broadcast_to(g.medoid, (B,)).astype(jnp.int32)
-    exact_fn = make_exact_dist_fn(g.vectors)
-    bitdot_fn = None
-    if use_kernel:
-        from repro.kernels.bitdot.ops import bitdot as bitdot_fn  # lazy: optional dep
-
-    def approx_fn(ctx, ids):
-        return rabitq.estimate_sqdist(codes, ctx, ids, bitdot_fn=bitdot_fn)
-
-    def one(q, s0):
-        ctx = rabitq.prepare_query(codes, q)
-        return _probing_one(g.neighbors, exact_fn, approx_fn, q, ctx, s0, params)
-
-    st = jax.vmap(one)(queries, start)
-    k = params.k
-    res = SearchResult(
-        ids=st.ce_ids[:, :k],
-        dists=jnp.sqrt(jnp.maximum(st.ce_d2[:, :k], 0.0)),
-        n_dist_comps=st.n_dist,
-        n_approx_comps=st.n_approx,
-        n_hops=st.n_hops,
-        final_l=st.l,
-        saturated=st.saturated,
-        n_encounters=st.n_enc,
-    )
-    if with_candidates:
-        return res, st.ce_ids, jnp.sqrt(jnp.maximum(st.ce_d2, 0.0))
-    return res
-
-
 def error_bounded_probing_search(index: EMQGIndex, queries: jax.Array, k: int,
                                  alpha: float, l_max: int = 256,
                                  l_step: int = 1, max_hops: int = 4096,
@@ -447,38 +261,50 @@ def error_bounded_probing_search(index: EMQGIndex, queries: jax.Array, k: int,
 # single exact rerank of the final candidate list.
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("params",))
+@partial(jax.jit, static_argnames=("params", "backend"))
 def ags_search(index: EMQGIndex, queries: jax.Array, params: SearchParams,
-               start: Optional[jax.Array] = None) -> SearchResult:
+               start: Optional[jax.Array] = None,
+               backend: str = "auto") -> SearchResult:
+    """Batched AGS on the lock-step beam engine.
+
+    The generic ``_beam_search_batch`` traversal only consumes the graph
+    topology and a ``batch_dist`` callable, so swapping in the RaBitQ
+    estimator yields the approximate-guided frontier for free — the whole
+    batch walks in one ``while_loop`` with the same bitset dedup and
+    masked adaptive transitions as the exact engine.  The final candidate
+    buffers (up to ``l_max+1`` ids per query) are then reranked with one
+    fused exact gather+L2 call (``backend`` selects its implementation).
+
+    Counters: ``n_approx_comps`` is the traversal's estimator evaluations;
+    ``n_dist_comps`` is the exact rerank cost (valid buffer entries).
+    """
     B = queries.shape[0]
     g, codes = index.graph, index.codes
     if start is None:
         start = jnp.broadcast_to(g.medoid, (B,)).astype(jnp.int32)
-    exact_fn = make_exact_dist_fn(g.vectors)
 
-    def one(q, s0):
-        ctx = rabitq.prepare_query(codes, q)
+    ctx = jax.vmap(lambda q: rabitq.prepare_query(codes, q))(queries)
 
-        def approx_dist(q_, ids):
-            return rabitq.estimate_sqdist(codes, ctx, ids)
+    def batch_approx(qs, ids):
+        return jax.vmap(
+            lambda c, i: rabitq.estimate_sqdist(codes, c, i))(ctx, ids)
 
-        st, _ = _search_one(g.neighbors, approx_dist, q, s0, params,
-                            faithful_prune=False)
-        # exact rerank of the whole final buffer
-        d2 = exact_fn(q, st.cand_ids)
-        order = jnp.argsort(d2)
-        return (st.cand_ids[order], d2[order], st.n_dist, st.n_enc,
-                st.n_hops, st.l, st.saturated)
+    st = _beam_search_batch(g, queries, start, params, batch_approx)
 
-    ids, d2, n_approx, n_enc, hops, final_l, sat = jax.vmap(one)(queries, start)
+    # exact rerank of the whole final buffer, one fused call
+    batch_exact = make_batch_dist_fn(g.vectors, backend)
+    d2 = batch_exact(queries, st.cand_ids)
+    neg, order = jax.lax.top_k(-d2, d2.shape[1])
+    ids = jnp.take_along_axis(st.cand_ids, order, axis=1)
+    d2 = -neg
     k = params.k
     return SearchResult(
         ids=ids[:, :k],
         dists=jnp.sqrt(jnp.maximum(d2[:, :k], 0.0)),
-        n_dist_comps=jnp.full_like(n_approx, ids.shape[1]),  # rerank cost
-        n_approx_comps=n_approx,
-        n_hops=hops,
-        final_l=final_l,
-        saturated=sat,
-        n_encounters=n_enc,
+        n_dist_comps=jnp.sum(st.cand_ids >= 0, axis=1).astype(jnp.int32),
+        n_approx_comps=st.n_dist,
+        n_hops=st.n_hops,
+        final_l=st.l,
+        saturated=st.saturated,
+        n_encounters=st.n_enc,
     )

@@ -2,53 +2,53 @@
 
 Implements Algorithm 1 (greedy beam search) and Algorithm 3 (error-bounded
 adaptive top-k search) of the paper as a *single* parameterized engine,
-reformulated for lock-step execution on TPU.  Two engines live here:
+reformulated for lock-step execution on TPU.
 
-``search``        — the **batch-level beam engine** (default).  One
-                    ``while_loop`` drives the whole query batch: each
-                    iteration selects the ``beam_width`` (W) best unvisited
-                    in-window candidates per query, gathers all ``B×W×M``
-                    neighbor ids at once, dedups them against a packed
-                    ``uint32`` visited bitset (O(1) test/set — see
-                    ``bitset.py``), and evaluates every fresh distance in a
-                    *single* fused gather+L2 call over ``[B, W·M]`` ids.  On
-                    TPU that call is the Pallas ``gather_l2_tiled`` kernel —
-                    one big contraction per hop for the MXU instead of B tiny
-                    ones; on CPU it lowers to the identical-math jnp path.
-                    Queries that have exhausted their window take the
-                    adaptive-α transition (grow ``l`` or stop) in the same
-                    lock-step iteration; finished queries are masked no-ops.
+``search`` is the **batch-level beam engine** — the only graph-search engine
+in the repo.  One ``while_loop`` drives the whole query batch: each
+iteration selects the ``beam_width`` (W) best unvisited in-window candidates
+per query, gathers all ``B×W×M`` neighbor ids at once, dedups them against a
+packed ``uint32`` visited bitset (O(1) test/set/clear — see ``bitset.py``),
+and evaluates every fresh distance in a *single* fused gather+L2 call over
+``[B, W·M]`` ids.  On TPU that call is the Pallas ``gather_l2_tiled`` kernel
+— one big contraction per hop for the MXU instead of B tiny ones; on CPU it
+lowers to the identical-math jnp path.  Queries that have exhausted their
+window take the adaptive-α transition (grow ``l`` or stop) in the same
+lock-step iteration; finished queries are masked no-ops.
 
-``legacy_search`` — the seed's per-query engine (``vmap`` over a per-query
-                    ``while_loop``, one node expanded per hop, ring-buffer
-                    visited set).  Kept as the parity oracle: at
-                    ``beam_width=1`` the beam engine expands nodes in the
-                    identical order and returns identical ids/dists.  Slated
-                    for deletion once the parity suite has soaked (ROADMAP).
-
-Shared semantics (both engines):
+Semantics:
 
 * The candidate set ``C`` is a fixed-width sorted array (ids, squared dists,
   visited flags) of capacity ``l_max + 1``.  Algorithm 3's literal "keep top
-  l+1" prune is available as ``faithful_prune=True``, but read literally it
-  deadlocks the adaptive loop: when ``l`` grows into a slot whose candidate
-  was pruned away (or already visited), the stop test ``d(q,C[l]) ≥ α·d(q,C[k])``
-  sees ``+inf`` and fires *regardless of α*, contradicting the paper's own
-  Exp-6/7 (α must widen the search).  The default ``faithful_prune=False``
-  retains the full ``l_max+1`` buffer — the window ``l`` still gates which
-  candidates may be *expanded* and the stop rule still reads ``C[l]``/``C[k]``,
-  which realizes the intended adaptive behavior (and is how NSG-style pools
-  with a growing capacity behave).
+  l+1" prune is available as ``faithful_prune=True``: the merged candidate
+  list is truncated to the top ``l+1`` every hop, and a pruned candidate
+  that was never expanded has its visited bit *cleared* so it can re-enter
+  (and be re-evaluated) once ``l`` grows — the re-insertion the literal
+  algorithm relies on.  Read literally the prune can deadlock the adaptive
+  loop: when ``l`` grows into a slot whose candidate was pruned away (or
+  already visited), the stop test ``d(q,C[l]) ≥ α·d(q,C[k])`` sees ``+inf``
+  and fires *regardless of α*, contradicting the paper's own Exp-6/7 (α must
+  widen the search).  The default ``faithful_prune=False`` retains the full
+  ``l_max+1`` buffer — the window ``l`` still gates which candidates may be
+  *expanded* and the stop rule still reads ``C[l]``/``C[k]``, which realizes
+  the intended adaptive behavior (and is how NSG-style pools with a growing
+  capacity behave).
 * The α-stop rule fires only when a query's window holds no unvisited
   candidate, so widening the per-hop frontier (W > 1) never skips the stop
   test — it only reorders the expansion schedule, which monotonic-graph
   convergence tolerates (the closure "expand until the window is exhausted"
   reaches the same fixed point family).
 
-The distance evaluation is pluggable: the beam engine takes a ``backend``
-("auto" | "jnp" | "kernel" | "kernel_tiled"), the legacy engine a ``dist_fn``
-so the δ-EMQG probing search (``probing.py``) can swap in quantized
-implementations without touching the control flow.
+Correctness is checked against implementation-independent oracles, not a
+reference engine: brute-force exact k-NN plus the paper's ``(1/δ)``
+approximation bound (``repro.testing.oracle``, ``tests/test_conformance.py``),
+and W=1 determinism / backend self-parity golden tests
+(``tests/test_beam_engine.py``).
+
+The distance evaluation is pluggable: ``backend`` selects
+("auto" | "jnp" | "kernel" | "kernel_tiled"), and ``_beam_search_batch``
+takes any ``batch_dist`` callable so the δ-EMQG searches (``probing.py``)
+can swap in quantized implementations without touching the control flow.
 """
 
 from __future__ import annotations
@@ -59,7 +59,13 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from .bitset import bitset_make, bitset_set, bitset_test, unique_per_row
+from .bitset import (
+    bitset_clear,
+    bitset_make,
+    bitset_set,
+    bitset_test,
+    unique_per_row,
+)
 from .types import (
     INVALID_ID,
     GraphIndex,
@@ -116,15 +122,6 @@ def make_batch_dist_fn(vectors: jax.Array, backend: str = "auto") -> Callable:
     raise ValueError(f"unknown distance backend: {backend!r}")
 
 
-def _merge_topc(ids_a, d2_a, vis_a, ids_b, d2_b, vis_b, cap: int):
-    """Merge two (id, d2, visited) lists, keep the ``cap`` smallest by d2."""
-    ids = jnp.concatenate([ids_a, ids_b])
-    d2 = jnp.concatenate([d2_a, d2_b])
-    vis = jnp.concatenate([vis_a, vis_b])
-    neg, idx = jax.lax.top_k(-d2, cap)
-    return ids[idx], -neg, vis[idx]
-
-
 def batch_merge_topc(ids_a, d2_a, vis_a, ids_b, d2_b, vis_b, cap: int):
     """Batched merge: [B, Ca] ⊎ [B, Cb] → top-``cap`` smallest d2 per row.
 
@@ -162,7 +159,7 @@ def select_top_w(d2: jax.Array, mask: jax.Array, w: int):
     """Per-row W best (smallest d2) slots among ``mask``.
 
     Returns (sel int32[B, W], valid bool[B, W]); ``lax.top_k`` stability
-    makes W=1 coincide with the legacy engine's ``argmin`` tie-break.
+    gives W=1 a deterministic lowest-index tie-break (same as ``argmin``).
     """
     masked = jnp.where(mask, d2, jnp.inf)
     neg, sel = jax.lax.top_k(-masked, w)
@@ -206,12 +203,43 @@ def adaptive_transition(p: SearchParams, cand_d2: jax.Array, l: jax.Array,
     )
 
 
+def faithful_prune_merge(cand_ids, cand_d2, cand_vis, new_ids, d2_new,
+                         seen, l, cap: int):
+    """Literal Alg.-3 line-9 merge: full sort of buffer ∪ fresh, keep the top
+    ``l+1`` per row, and *clear the visited bits* of pruned candidates that
+    were never expanded so they can re-enter once ``l`` grows (the
+    re-insertion the literal prune relies on; expanded nodes keep their bits
+    — they play the role of the paper's visited set T).
+
+    Returns (cand_ids, cand_d2, cand_vis, seen), buffers trimmed to ``cap``
+    columns (safe: ``l+1 ≤ l_max+1 = cap`` bounds the kept prefix).
+    """
+    ids_all = jnp.concatenate([cand_ids, new_ids], axis=1)
+    d2_all = jnp.concatenate([cand_d2, d2_new], axis=1)
+    vis_all = jnp.concatenate(
+        [cand_vis, jnp.zeros_like(new_ids, jnp.bool_)], axis=1)
+    neg, order = jax.lax.top_k(-d2_all, ids_all.shape[1])      # full sort
+    take = lambda x: jnp.take_along_axis(x, order, axis=1)  # noqa: E731
+    ids_s, d2_s, vis_s = take(ids_all), -neg, take(vis_all)
+    pos_all = jnp.arange(ids_s.shape[1], dtype=jnp.int32)[None, :]
+    keep = pos_all <= l[:, None]
+    # pruned ∧ unexpanded → clearable; ids are unique per row (buffer entries
+    # are unique and fresh ids were, by definition, not in the buffer)
+    clearable = jnp.where(keep | vis_s, INVALID_ID, ids_s)
+    seen = bitset_clear(seen, clearable)
+    return (jnp.where(keep, ids_s, INVALID_ID)[:, :cap],
+            jnp.where(keep, d2_s, jnp.inf)[:, :cap],
+            (keep & vis_s)[:, :cap],
+            seen)
+
+
 def _beam_search_batch(
     graph: GraphIndex,
     queries: jax.Array,        # f32[B, d]
     start: jax.Array,          # int32[B]
     p: SearchParams,
     batch_dist: Callable,
+    faithful_prune: bool = False,
 ) -> _BeamState:
     B = queries.shape[0]
     C = p.l_max + 1
@@ -273,9 +301,14 @@ def _beam_search_batch(
         n_dist = s.n_dist + n_evals
         n_hops = s.n_hops + jnp.sum(selv, axis=1).astype(jnp.int32)
 
-        cand_ids, cand_d2, cand_vis = batch_merge_topc(
-            s.cand_ids, s.cand_d2, cand_vis,
-            new_ids, d2_new, jnp.zeros_like(fresh), C)
+        if faithful_prune:
+            cand_ids, cand_d2, cand_vis, seen = faithful_prune_merge(
+                s.cand_ids, s.cand_d2, cand_vis, new_ids, d2_new,
+                seen, s.l, C)
+        else:
+            cand_ids, cand_d2, cand_vis = batch_merge_topc(
+                s.cand_ids, s.cand_d2, cand_vis,
+                new_ids, d2_new, jnp.zeros_like(fresh), C)
 
         # -- adaptive transition for window-exhausted queries ----------------
         conv = active & ~has_frontier
@@ -305,181 +338,22 @@ def search(
 
     Returns SearchResult (and optionally the final candidate buffers for
     local-optimum analysis).  ``params.beam_width`` sets the per-hop frontier
-    width W; W=1 reproduces the legacy per-query engine node-for-node.
+    width W; W=1 is deterministic greedy best-first (golden-tested for
+    run-to-run and cross-backend self-parity).
 
-    ``faithful_prune=True`` (the literal Alg.-3 top-(l+1) prune) delegates to
-    the legacy engine: literal pruning relies on *re-inserting* previously
-    pruned nodes once ``l`` grows, which the seen-bitset intentionally
-    forbids (a pruned node can never re-enter the full-capacity buffer, so
-    the default mode needs no re-insertion — the literal variant does).
-    The delegation refuses non-default ``beam_width``/``backend`` rather
-    than silently running a different engine configuration.
+    ``faithful_prune=True`` runs the literal Alg.-3 top-(l+1) prune on the
+    same engine: the candidate buffer is truncated to ``l+1`` every hop and
+    pruned-but-never-expanded candidates have their visited bits cleared so
+    they can re-enter (and be re-evaluated) when ``l`` grows — see
+    ``faithful_prune_merge``.  It composes with any ``beam_width`` and
+    ``backend``.
     """
-    if faithful_prune:
-        if params.beam_width != 1 or backend != "auto":
-            raise ValueError(
-                "faithful_prune=True runs on the legacy per-query engine, "
-                "which supports neither beam_width>1 nor a distance backend "
-                f"(got beam_width={params.beam_width}, backend={backend!r})")
-        return legacy_search(graph, queries, params, start=start,
-                             faithful_prune=True,
-                             with_candidates=with_candidates)
     B = queries.shape[0]
     if start is None:
         start = jnp.broadcast_to(graph.medoid, (B,)).astype(jnp.int32)
     batch_dist = make_batch_dist_fn(graph.vectors, backend)
-    st = _beam_search_batch(graph, queries, start, params, batch_dist)
-    k = params.k
-    res = SearchResult(
-        ids=st.cand_ids[:, :k],
-        dists=jnp.sqrt(jnp.maximum(st.cand_d2[:, :k], 0.0)),
-        n_dist_comps=st.n_dist,
-        n_approx_comps=jnp.zeros_like(st.n_dist),
-        n_hops=st.n_hops,
-        final_l=st.l,
-        saturated=st.saturated,
-        n_encounters=st.n_enc,
-    )
-    if with_candidates:
-        return res, st.cand_ids, jnp.sqrt(jnp.maximum(st.cand_d2, 0.0))
-    return res
-
-
-# ---------------------------------------------------------------------------
-# Legacy per-query engine (parity oracle — see module docstring).
-# ---------------------------------------------------------------------------
-
-
-class _State(NamedTuple):
-    cand_ids: jax.Array    # int32[C]
-    cand_d2: jax.Array     # f32[C]   squared dists, ascending (inf = empty)
-    cand_vis: jax.Array    # bool[C]
-    t_ids: jax.Array       # int32[T] expanded-node ring buffer
-    t_cnt: jax.Array       # int32
-    l: jax.Array           # int32    current candidate window (Alg. 3)
-    n_dist: jax.Array      # int32    exact distance evaluations
-    n_enc: jax.Array       # int32    candidate encounters (pre-dedup)
-    n_hops: jax.Array      # int32    expansions
-    done: jax.Array        # bool
-    saturated: jax.Array   # bool     l hit l_max before the α-rule fired
-
-
-def _search_one(
-    neighbors: jax.Array,       # int32[n, M]
-    dist_fn: Callable,
-    q: jax.Array,               # f32[d]
-    start: jax.Array,           # int32[]
-    p: SearchParams,
-    faithful_prune: bool,
-) -> tuple[_State, jax.Array]:
-    C = p.l_max + 1
-    T = p.max_hops
-
-    d2_start = dist_fn(q, start[None])[0]
-    st = _State(
-        cand_ids=jnp.full((C,), INVALID_ID, jnp.int32).at[0].set(start),
-        cand_d2=jnp.full((C,), jnp.inf, jnp.float32).at[0].set(d2_start),
-        cand_vis=jnp.zeros((C,), jnp.bool_),
-        t_ids=jnp.full((T,), INVALID_ID, jnp.int32),
-        t_cnt=jnp.int32(0),
-        l=jnp.int32(min(max(p.l0, p.k), p.l_max)),
-        n_dist=jnp.int32(1),
-        n_enc=jnp.int32(1),
-        n_hops=jnp.int32(0),
-        done=jnp.bool_(False),
-        saturated=jnp.bool_(False),
-    )
-
-    pos = jnp.arange(C, dtype=jnp.int32)
-    alpha2 = jnp.float32(p.alpha * p.alpha)
-
-    def in_window_unvisited(s: _State):
-        return (pos < s.l) & (s.cand_ids >= 0) & (~s.cand_vis)
-
-    def cond(s: _State):
-        return (~s.done) & (s.n_hops < p.max_hops)
-
-    def expand(s: _State) -> _State:
-        mask = in_window_unvisited(s)
-        sel = jnp.argmin(jnp.where(mask, s.cand_d2, jnp.inf))
-        u_id = s.cand_ids[sel]
-        cand_vis = s.cand_vis.at[sel].set(True)
-        t_ids = s.t_ids.at[s.t_cnt % T].set(u_id)
-        t_cnt = s.t_cnt + 1
-
-        nbrs = jnp.take(neighbors, jnp.maximum(u_id, 0), axis=0)
-        valid = nbrs >= 0
-        in_cand = jnp.any(nbrs[:, None] == s.cand_ids[None, :], axis=1)
-        in_vis = jnp.any(nbrs[:, None] == t_ids[None, :], axis=1)
-        fresh = valid & ~in_cand & ~in_vis
-
-        d2_new = dist_fn(q, jnp.where(fresh, nbrs, INVALID_ID))
-        n_dist = s.n_dist + jnp.sum(fresh).astype(jnp.int32)
-        n_enc = s.n_enc + jnp.sum(valid).astype(jnp.int32)
-
-        cand_ids, cand_d2, cand_vis = _merge_topc(
-            s.cand_ids, s.cand_d2, cand_vis,
-            jnp.where(fresh, nbrs, INVALID_ID),
-            jnp.where(fresh, d2_new, jnp.inf),
-            jnp.zeros_like(fresh),
-            C,
-        )
-        if faithful_prune:
-            # Alg. 3 line 9: retain only the top l+1 candidates.
-            keep = pos <= s.l
-            cand_ids = jnp.where(keep, cand_ids, INVALID_ID)
-            cand_d2 = jnp.where(keep, cand_d2, jnp.inf)
-            cand_vis = jnp.where(keep, cand_vis, False)
-        return s._replace(
-            cand_ids=cand_ids, cand_d2=cand_d2, cand_vis=cand_vis,
-            t_ids=t_ids, t_cnt=t_cnt, n_dist=n_dist, n_enc=n_enc,
-            n_hops=s.n_hops + 1,
-        )
-
-    def converged(s: _State) -> _State:
-        if not p.adaptive:
-            return s._replace(done=jnp.bool_(True))
-        # Alg. 3 line 11: stop iff d(q, C[l]) ≥ α · d(q, C[k]).
-        d2_l = s.cand_d2[jnp.minimum(s.l - 1, C - 1)]
-        d2_k = s.cand_d2[p.k - 1]
-        stop = d2_l >= alpha2 * d2_k
-        at_cap = s.l >= p.l_max
-        new_l = jnp.minimum(s.l + p.l_step, p.l_max)
-        return s._replace(
-            l=jnp.where(stop, s.l, new_l),
-            done=stop | at_cap,
-            saturated=s.saturated | (at_cap & ~stop),
-        )
-
-    def body(s: _State) -> _State:
-        has_unvisited = jnp.any(in_window_unvisited(s))
-        return jax.lax.cond(has_unvisited, expand, converged, s)
-
-    final = jax.lax.while_loop(cond, body, st)
-    return final, q
-
-
-@partial(jax.jit, static_argnames=("params", "faithful_prune", "with_candidates"))
-def legacy_search(
-    graph: GraphIndex,
-    queries: jax.Array,                 # f32[B, d]
-    params: SearchParams,
-    start: Optional[jax.Array] = None,  # int32[B] or None → medoid
-    faithful_prune: bool = False,
-    with_candidates: bool = False,
-):
-    """Seed per-query Alg. 1 / Alg. 3 engine (one node per hop, ring-buffer
-    visited set).  Parity oracle for the beam engine; not on any hot path."""
-    B = queries.shape[0]
-    if start is None:
-        start = jnp.broadcast_to(graph.medoid, (B,)).astype(jnp.int32)
-    dist_fn = make_exact_dist_fn(graph.vectors)
-
-    def one(q, s0):
-        st, _ = _search_one(graph.neighbors, dist_fn, q, s0, params, faithful_prune)
-        return st
-
-    st = jax.vmap(one)(queries, start)
+    st = _beam_search_batch(graph, queries, start, params, batch_dist,
+                            faithful_prune=faithful_prune)
     k = params.k
     res = SearchResult(
         ids=st.cand_ids[:, :k],

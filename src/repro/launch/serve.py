@@ -52,10 +52,6 @@ def main(argv=None) -> int:
                     help="queue depth that steps the ladder back up")
     ap.add_argument("--rungs", type=int, default=4,
                     help="degradation-ladder depth (resilient mode)")
-    ap.add_argument("--legacy-fallback", action="store_true",
-                    help="opt-in: keep the legacy per-query engine as the "
-                         "final circuit-breaker tier (default chain ends at "
-                         "beam/jnp with beam_width=1)")
     ap.add_argument("--audit", action="store_true",
                     help="run the graph-invariant auditor (core.verify) on "
                          "the built index before serving; non-zero exit on "
@@ -88,7 +84,7 @@ def main(argv=None) -> int:
             deadline_s=None if args.deadline_ms is None
             else args.deadline_ms / 1e3,
             degrade_depth=args.degrade_at, recover_depth=args.recover_at,
-            n_rungs=args.rungs, legacy_fallback=args.legacy_fallback)
+            n_rungs=args.rungs)
         srv = ResilientAnnServer(idx, params, config=cfg,
                                  max_batch=128, buckets=(32, 128))
         srv.submit_many(queries)

@@ -7,16 +7,14 @@ and per-request results are fanned back out.  Straggler mitigation falls out
 of the lock-step formulation — a hard query costs masked iterations instead
 of blocking a core.
 
-The server runs the batch-level beam engine: ``params.beam_width`` widens
-the per-hop frontier (fewer, fatter lock-step iterations per batch — the
-QPS/latency knob), and ``backend`` selects the fused gather+L2
-implementation for the distance hot path ("auto" picks the tiled Pallas
-kernel on TPU, plain XLA elsewhere).  ``engine="legacy"`` keeps the seed
-per-query engine reachable for A/B traffic splits while the parity suite
-soaks; the resilience layer (``resilience.py``) wraps this server with
-admission control, deadlines, and an error-bounded degradation ladder whose
-circuit breaker falls back to ``(beam, jnp, beam_width=1)`` — the legacy
-engine joins that chain only by explicit opt-in.
+The server runs the batch-level beam engine — the only engine: ``params.
+beam_width`` widens the per-hop frontier (fewer, fatter lock-step iterations
+per batch — the QPS/latency knob), and ``backend`` selects the fused
+gather+L2 implementation for the distance hot path ("auto" picks the tiled
+Pallas kernel on TPU, plain XLA elsewhere).  The resilience layer
+(``resilience.py``) wraps this server with admission control, deadlines, and
+an error-bounded degradation ladder whose circuit breaker bottoms out at
+``(beam, jnp, beam_width=1)`` — greedy best-first on the production engine.
 
 Clocks: every request records two timestamps — ``arrival_t``, the *logical*
 arrival time (caller-supplied when replaying a trace, else wall clock), and
@@ -43,8 +41,6 @@ from repro.core import (
     EMQGIndex,
     GraphIndex,
     SearchParams,
-    legacy_probing_search,
-    legacy_search,
     probing_search,
     search,
 )
@@ -92,7 +88,7 @@ class AnnServer:
     def __init__(self, index: GraphIndex | EMQGIndex, params: SearchParams,
                  max_batch: int = 64, buckets: tuple[int, ...] = (8, 32, 64),
                  engine: str = "beam", backend: str = "auto"):
-        if engine not in ("beam", "legacy"):
+        if engine != "beam":
             raise ValueError(f"unknown engine: {engine!r}")
         self.index = index
         self.params = params
@@ -110,20 +106,18 @@ class AnnServer:
                 params: Optional[SearchParams] = None,
                 engine: Optional[str] = None,
                 backend: Optional[str] = None):
-        """Run one batch through the selected engine.  The overrides are the
-        seam the resilience layer steers (ladder params, breaker tier) and
-        the fault harness wraps."""
+        """Run one batch through the beam engine.  The overrides are the seam
+        the resilience layer steers (ladder params, breaker tier) and the
+        fault harness wraps; ``engine`` stays a parameter so breaker tiers
+        remain addressable (the sharded subclass adds its own tiers)."""
         params = params if params is not None else self.params
         engine = engine if engine is not None else self.engine
         backend = backend if backend is not None else self.backend
+        if engine != "beam":
+            raise ValueError(f"unknown engine: {engine!r}")
         if self.quantized:
-            if engine == "beam":
-                return probing_search(self.index, queries, params,
-                                      backend=backend)
-            return legacy_probing_search(self.index, queries, params)
-        if engine == "beam":
-            return search(self.index, queries, params, backend=backend)
-        return legacy_search(self.index, queries, params)
+            return probing_search(self.index, queries, params, backend=backend)
+        return search(self.index, queries, params, backend=backend)
 
     # -- request path -------------------------------------------------------
     def submit(self, query: np.ndarray, arrival_t: Optional[float] = None):

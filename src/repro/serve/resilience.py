@@ -24,11 +24,12 @@ Containment layers, outermost first:
 5. **Circuit breaker** — repeated faults open the tier and fall back down
    the chain ``(beam, pallas) → (beam, jnp) → (beam, jnp, W=1)``; after a
    cooldown the tier is probed again (half-open) and closes on success.
-   The last resort pins ``beam_width=1`` — greedy best-first on the same
-   lock-step engine, the minimal configuration that still carries the
-   ``1/(δ·α)`` guarantee.  The legacy per-query engine is reachable only
-   by explicit opt-in (``ResilienceConfig.legacy_fallback``) — it exists
-   for A/B parity, not as a hidden production code path.
+   The chain bottoms out at ``(beam, jnp, W=1)`` — greedy best-first on
+   the same lock-step engine, the minimal configuration that still
+   carries the ``1/(δ·α)`` guarantee.  Exhausting every tier raises
+   ``SearchFailure`` inside the containment, which ``drain()`` converts
+   to per-request ``status="failed"`` responses — never a crash, and
+   never a hidden fallback engine.
 
 Everything is single-threaded and deterministically testable: the breaker
 takes an injectable clock and the fault harness (``repro.testing.faults``)
@@ -182,21 +183,16 @@ class CircuitBreaker:
             t.open_until = self.clock() + self.cooldown_s
 
 
-def default_tiers(engine: str, backend: str,
-                  include_legacy: bool = False) -> list[tuple]:
+def default_tiers(engine: str, backend: str) -> list[tuple]:
     """Primary tier as configured, then the portable jnp backend, then
     ``(beam, jnp, W=1)`` — greedy best-first on the production engine, the
-    minimal tier that still carries the δ-EMG bound.  The legacy per-query
-    engine joins the chain only with ``include_legacy`` (kept for A/B
-    parity; excluding it from the default chain is what lets it be deleted
-    once the parity suite has soaked)."""
+    minimal tier that still carries the δ-EMG bound.  That is the bottom:
+    past it the batch fails loudly (``SearchFailure``), it does not reach
+    for another engine."""
     chain = [(engine, backend, None)]
     if engine == "beam" and backend != "jnp":
         chain.append(("beam", "jnp", None))
-    if engine != "legacy":
-        chain.append(("beam", "jnp", 1))
-    if include_legacy and engine != "legacy":
-        chain.append(("legacy", "auto", None))
+    chain.append(("beam", "jnp", 1))
     seen, out = set(), []
     for t in chain:
         if t not in seen:
@@ -223,7 +219,6 @@ class ResilienceConfig:
     breaker_threshold: int = 3          # consecutive faults to open a tier
     breaker_cooldown_s: float = 30.0
     delta: Optional[float] = None       # override index δ for bound reporting
-    legacy_fallback: bool = False       # opt-in: legacy engine as final tier
 
 
 @dataclasses.dataclass
@@ -287,8 +282,7 @@ class ResilientAnnServer(AnnServer):
             else float(getattr(graph, "delta", 0.0))
         self.ladder = DegradationLadder(params, delta, config.n_rungs)
         self.breaker = CircuitBreaker(
-            default_tiers(self.engine, self.backend,
-                          include_legacy=config.legacy_fallback),
+            default_tiers(self.engine, self.backend),
             threshold=config.breaker_threshold,
             cooldown_s=config.breaker_cooldown_s, clock=clock)
         self.rung = 0

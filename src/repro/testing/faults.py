@@ -80,12 +80,16 @@ class FaultPlan:
 class inject_search_faults:
     """Context manager wrapping ``server._search`` with a ``FaultPlan``.
 
-    Counts calls (total and plan-matching) for assertions::
+    Counts calls (total and plan-matching) for assertions, and records the
+    ``(engine, backend, beam_width)`` tier of *every* call in ``tier_log``
+    so tests can assert the exact fallback ladder a fault sequence walked —
+    e.g. that the circuit breaker bottoms out at ``("beam", "jnp", 1)``::
 
         with inject_search_faults(srv, FaultPlan(fail_first=2)) as inj:
             srv.submit_many(queries)
             responses = srv.drain()
         assert inj.n_failed == 2
+        assert inj.tier_log[-1] == ("beam", "jnp", 1)
     """
 
     def __init__(self, server, plan: FaultPlan):
@@ -94,6 +98,7 @@ class inject_search_faults:
         self.n_calls = 0
         self.n_matched = 0
         self.n_failed = 0
+        self.tier_log: list[tuple] = []   # (engine, backend, beam_width)
         self._orig = None
 
     def _matches(self, engine: str, backend: str,
@@ -117,6 +122,7 @@ class inject_search_faults:
             eng = engine if engine is not None else self.server.engine
             bck = backend if backend is not None else self.server.backend
             p = params if params is not None else self.server.params
+            self.tier_log.append((eng, bck, getattr(p, "beam_width", None)))
             if self._matches(eng, bck, getattr(p, "beam_width", None)):
                 idx = self.n_matched
                 self.n_matched += 1

@@ -2,8 +2,25 @@
 single-CPU device; multi-device tests spawn subprocesses that set
 --xla_force_host_platform_device_count themselves."""
 
+import os
+
 import numpy as np
 import pytest
+
+try:
+    # CI hypothesis profile: derandomized (fixed seed) with bounded examples
+    # so property tests are deterministic and time-boxed; select another
+    # profile via HYPOTHESIS_PROFILE.  Absent hypothesis, property tests
+    # skip via tests/hypothesis_compat.py and no profile is needed.
+    from hypothesis import HealthCheck, settings as _hyp_settings
+
+    _hyp_settings.register_profile(
+        "ci", max_examples=25, deadline=None, derandomize=True,
+        suppress_health_check=[HealthCheck.too_slow])
+    _hyp_settings.register_profile("dev", max_examples=50, deadline=None)
+    _hyp_settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
+except ModuleNotFoundError:
+    pass
 
 
 def gmm(n, d, k_clusters, seed, scale=0.35):
@@ -37,6 +54,11 @@ def fault_seed():
     """Seed for the fault-injection suite.  CI sweeps REPRO_FAULT_SEED over a
     matrix so deterministic fault schedules get exercised from several
     starting states; locally it defaults to 0."""
-    import os
-
     return int(os.environ.get("REPRO_FAULT_SEED", "0"))
+
+
+@pytest.fixture(scope="session")
+def conformance_seed():
+    """Seed for the oracle-based conformance suite's randomized corpora.
+    CI sweeps REPRO_CONFORMANCE_SEED over a matrix; locally defaults to 0."""
+    return int(os.environ.get("REPRO_CONFORMANCE_SEED", "0"))

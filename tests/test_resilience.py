@@ -14,7 +14,7 @@ import pytest
 
 import dataclasses
 
-from repro.core import SearchParams, build_exact, legacy_search, search
+from repro.core import SearchParams, build_exact, search
 from repro.serve import (
     AnnServer,
     CircuitBreaker,
@@ -113,7 +113,7 @@ def test_nan_query_rejected_per_request_not_per_batch(tiny):
     assert statuses.count("ok") == 6
     assert srv.stats.n_rejected == 3 and srv.stats.n_requests == 6
     # the good queries got real results, identical to an unfaulted server
-    ref = legacy_search(tiny["graph"], jnp.asarray(good), PARAMS)
+    ref = search(tiny["graph"], jnp.asarray(good), PARAMS)
     ok = [r for r in rs if r.ok]
     for i, r in enumerate(ok):
         assert r.ids.shape == (PARAMS.k,)
@@ -251,7 +251,8 @@ def test_persistent_kernel_fault_falls_back_to_single_beam(tiny):
     multi-row gather kernel) must walk the breaker down to the last-resort
     ``(beam, jnp, W=1)`` tier — greedy best-first on the production engine,
     with results identical to calling it directly, and zero failed
-    requests.  The legacy engine must NOT appear: it is opt-in only."""
+    requests.  There is no tier below it — W=1 on the batch engine is the
+    floor of the chain."""
     srv = ResilientAnnServer(
         tiny["graph"], PARAMS,
         config=fast_cfg(breaker_threshold=2), max_batch=8, buckets=(8,))
@@ -273,44 +274,52 @@ def test_persistent_kernel_fault_falls_back_to_single_beam(tiny):
 
 
 @pytest.mark.faults
-def test_legacy_fallback_is_opt_in(tiny):
-    """With ``legacy_fallback=True`` (and only then) a fault that kills the
-    beam engine entirely routes traffic to the legacy per-query engine."""
+def test_breaker_ladder_bottoms_out_at_beam_jnp_w1(tiny):
+    """The tier log of a persistent-fault walk must end at the terminal
+    ``(beam, jnp, 1)`` tier and never mention any other engine — there is
+    no engine below the beam engine to reach for."""
     srv = ResilientAnnServer(
         tiny["graph"], PARAMS,
-        config=fast_cfg(breaker_threshold=2, legacy_fallback=True),
-        max_batch=8, buckets=(8,))
-    qs = tiny["queries"][:16]
+        config=fast_cfg(breaker_threshold=2), max_batch=8, buckets=(8,))
     with inject_search_faults(
-            srv, FaultPlan(fail_first=10**6, match_engine="beam")) as inj:
-        srv.submit_many(qs)
+            srv, FaultPlan(fail_first=10**6, match_engine="beam",
+                           match_min_beam_width=2)) as inj:
+        srv.submit_many(tiny["queries"][:16])
         rs = srv.drain()
-    assert inj.n_failed >= 2
-    assert all(r.ok for r in rs) and srv.stats.n_failed == 0
-    assert all(r.tier == "legacy/auto" for r in rs)
-    ref = legacy_search(tiny["graph"], jnp.asarray(qs),
-                        srv.ladder.params(srv.rung))
-    np.testing.assert_array_equal(
-        np.stack([r.ids for r in rs]), np.asarray(ref.ids))
+    assert all(r.ok for r in rs)
+    assert inj.tier_log[-1] == ("beam", "jnp", 1)
+    assert {t[0] for t in inj.tier_log} == {"beam"}
+    # the walked ladder is exactly the default chain, in order
+    walked = []
+    for t in inj.tier_log:
+        if t not in walked:
+            walked.append(t)
+    assert walked == [("beam", "auto", PARAMS.beam_width),
+                      ("beam", "jnp", PARAMS.beam_width), ("beam", "jnp", 1)]
 
 
 @pytest.mark.faults
 def test_every_tier_dead_yields_failed_responses_not_a_crash(tiny):
+    """Exhausting the whole chain raises cleanly *inside* the containment:
+    per-request ``status="failed"``, no crash, and the final attempt was on
+    the terminal ``(beam, jnp, 1)`` tier — not some deleted engine."""
     srv = ResilientAnnServer(
         tiny["graph"], PARAMS,
         config=fast_cfg(breaker_threshold=2, max_retries=1),
         max_batch=8, buckets=(8,))
-    with inject_search_faults(srv, FaultPlan(fail_first=10**6)):
+    with inject_search_faults(srv, FaultPlan(fail_first=10**6)) as inj:
         srv.submit_many(tiny["queries"][:8])
         rs = srv.drain()                     # must not raise
     assert all(r.status == "failed" for r in rs)
     assert all("KernelFault" in r.error for r in rs)
     assert srv.stats.n_failed == 8
+    assert inj.tier_log[-1] == ("beam", "jnp", 1)
+    assert {t[0] for t in inj.tier_log} == {"beam"}
 
 
 def test_circuit_breaker_half_open_recovery():
     t = [0.0]
-    br = CircuitBreaker([("beam", "auto"), ("legacy", "auto")],
+    br = CircuitBreaker([("beam", "auto"), ("beam", "jnp")],
                         threshold=2, cooldown_s=10.0, clock=lambda: t[0])
     assert br.current()[0] == 0
     br.record_failure(0)
@@ -330,12 +339,16 @@ def test_circuit_breaker_half_open_recovery():
 
 
 def test_default_tiers_chain():
+    """The chain always bottoms out at ``(beam, jnp, 1)`` — greedy
+    best-first on the batch engine is the terminal tier for any starting
+    engine/backend, and no deleted engine name can reappear."""
     assert default_tiers("beam", "auto") == \
         [("beam", "auto", None), ("beam", "jnp", None), ("beam", "jnp", 1)]
     assert default_tiers("beam", "jnp") == \
         [("beam", "jnp", None), ("beam", "jnp", 1)]
-    assert default_tiers("legacy", "auto") == [("legacy", "auto", None)]
-    # the legacy per-query engine joins the chain only by explicit opt-in
-    assert default_tiers("beam", "auto", include_legacy=True)[-1] == \
-        ("legacy", "auto", None)
-    assert ("legacy", "auto", None) not in default_tiers("beam", "auto")
+    for engine in ("beam", "probing"):
+        for backend in ("auto", "jnp", "kernel", "kernel_tiled"):
+            chain = default_tiers(engine, backend)
+            assert chain[-1] == ("beam", "jnp", 1)
+            assert len(chain) == len(set(chain))      # no duplicate tiers
+            assert all(t[0] in ("beam", "probing") for t in chain)
