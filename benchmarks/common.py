@@ -84,8 +84,12 @@ def recall(ids, gt_i, k) -> float:
     ]))
 
 
-def timed_qps(fn, queries, repeats=3):
-    """Wall-clock QPS proxy (jit-warmed, best of `repeats`)."""
+def timed_qps(fn, queries, repeats=3, hist=None):
+    """Wall-clock QPS proxy (jit-warmed, best of `repeats`).
+
+    ``hist`` — optional :class:`repro.obs.Histogram`; every repeat's
+    elapsed batch time is observed into it so callers can report
+    p50/p95/p99 from the same bucket math the serve layer uses."""
     out = fn(queries)                          # warm / trace
     jax.block_until_ready(out)
     best = float("inf")
@@ -93,7 +97,10 @@ def timed_qps(fn, queries, repeats=3):
         t0 = time.perf_counter()
         out = fn(queries)
         jax.block_until_ready(out)
-        best = min(best, time.perf_counter() - t0)
+        elapsed = time.perf_counter() - t0
+        if hist is not None:
+            hist.observe(elapsed)
+        best = min(best, elapsed)
     return queries.shape[0] / best, out
 
 

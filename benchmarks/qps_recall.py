@@ -1,7 +1,10 @@
 """Exp-1 (Fig. 3): QPS vs recall across methods, k ∈ {1, 10, 100}.
 
 δ-EMG / δ-EMQG sweep the accuracy parameter α; the baselines sweep their
-search width l — exactly the paper's protocol."""
+search width l — exactly the paper's protocol.  The δ-EMG/δ-EMQG rows also
+report p50/p95/p99 batch latency from the shared ``repro.obs.Histogram``
+(identical bucket math to the serve layer's latency families), alongside
+the best-of-repeats mean QPS."""
 
 from __future__ import annotations
 
@@ -14,6 +17,7 @@ from repro.core import (
     error_bounded_search,
     greedy_search,
 )
+from repro.obs import Histogram
 
 from . import common
 from .common import corpus, emit, index_baseline, index_emg, index_emqg, recall, timed_qps
@@ -21,6 +25,13 @@ from .common import corpus, emit, index_baseline, index_emg, index_emqg, recall,
 ALPHAS = (1.0, 1.1, 1.4, 2.0, 3.0)
 WIDTHS = (16, 40, 96)
 BEAM_WIDTHS = (1, 4)   # per-hop frontier of the lock-step batch engine
+LAT_REPEATS = 5        # repeats feeding the latency histogram rows
+
+
+def _lat_fields(hist: Histogram) -> dict:
+    """p50/p95/p99 batch latency (seconds) from the shared histogram."""
+    pct = hist.percentiles()
+    return {f"lat_{k}_s": v for k, v in pct.items()}
 
 
 def run(k_values=(1, 10)) -> dict:  # k=100 representable; 1-core trace cost prohibitive
@@ -33,22 +44,27 @@ def run(k_values=(1, 10)) -> dict:  # k=100 representable; 1-core trace cost pro
         g = index_emg()
         for alpha in ALPHAS:
             for bw in BEAM_WIDTHS:
+                hist = Histogram()
                 qps, res = timed_qps(
                     lambda qq, a=alpha, w=bw: error_bounded_search(
                         g, qq, k=k, alpha=a, l_max=max(192, 2 * k),
-                        beam_width=w), q)
+                        beam_width=w), q, repeats=LAT_REPEATS, hist=hist)
                 method = "delta-emg" if bw == 1 else f"delta-emg-bw{bw}"
                 rows.append({"method": method, "param": alpha,
                              "recall": recall(res.ids, gt_i, k), "qps": qps,
-                             "ndist": float(np.mean(np.asarray(res.n_dist_comps)))})
+                             "ndist": float(np.mean(np.asarray(res.n_dist_comps))),
+                             **_lat_fields(hist)})
         idx = index_emqg()
         for alpha in ALPHAS:
+            hist = Histogram()
             qps, res = timed_qps(
                 lambda qq, a=alpha: error_bounded_probing_search(
-                    idx, qq, k=k, alpha=a, l_max=max(192, 2 * k)), q)
+                    idx, qq, k=k, alpha=a, l_max=max(192, 2 * k)), q,
+                repeats=LAT_REPEATS, hist=hist)
             rows.append({"method": "delta-emqg", "param": alpha,
                          "recall": recall(res.ids, gt_i, k), "qps": qps,
-                         "ndist": float(np.mean(np.asarray(res.n_dist_comps)))})
+                         "ndist": float(np.mean(np.asarray(res.n_dist_comps))),
+                         **_lat_fields(hist)})
         for kind in ("nsg", "tau_mg", "vamana", "nsw", "knn"):
             gb = index_baseline(kind)
             for l in WIDTHS:

@@ -42,6 +42,7 @@ global top-k (mirrors the ``1/(δ·α)`` bound reporting in
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 from typing import Optional, Sequence
 
@@ -244,18 +245,54 @@ class ShardHealthRegistry:
     search: at most ONE live replica per logical shard participates (two
     replicas contributing the same rows would fill the merged top-k with
     duplicate ids).  A logical shard is covered iff any replica is live.
+
+    Liveness can be driven two ways: explicitly (``mark_dead`` /
+    ``mark_live`` — the operator surface, and what the fault harness's
+    ``ShardDeathPlan`` calls) or implicitly via **heartbeats** — every
+    replica records ``heartbeat()`` timestamps on the injectable monotonic
+    ``clock``, and a :class:`DeadlineHealthChecker` auto-``mark_dead``s any
+    live replica whose heartbeat age exceeds its deadline.  ``publish``
+    mirrors the state into an ``obs`` registry (``shard_live{shard}``,
+    ``shard_coverage``, ``shard_failover`` gauges).
     """
 
-    def __init__(self, n_shards: int, n_replicas: int = 1):
+    def __init__(self, n_shards: int, n_replicas: int = 1,
+                 clock=None):
+        import time as _time
         self.n_shards = n_shards
         self.n_replicas = n_replicas
+        self.clock = clock if clock is not None else _time.perf_counter
         self._live = np.ones((n_shards, n_replicas), bool)
+        now = self.clock()
+        self._last_beat = np.full((n_shards, n_replicas), now, float)
 
     def mark_dead(self, shard: int, replica: int = 0) -> None:
         self._live[shard, replica] = False
 
     def mark_live(self, shard: int, replica: int = 0) -> None:
         self._live[shard, replica] = True
+        self._last_beat[shard, replica] = self.clock()
+
+    def heartbeat(self, shard: int, replica: int = 0,
+                  now: Optional[float] = None) -> None:
+        """Record a liveness heartbeat for one replica (does NOT revive a
+        slot already marked dead — a zombie's late beat must not undo an
+        operator/checker kill; use ``mark_live`` for explicit revival)."""
+        self._last_beat[shard, replica] = \
+            now if now is not None else self.clock()
+
+    def heartbeat_age(self, shard: int, replica: int = 0,
+                      now: Optional[float] = None) -> float:
+        now = now if now is not None else self.clock()
+        return float(now - self._last_beat[shard, replica])
+
+    def publish(self, metrics) -> None:
+        """Mirror liveness into an ``obs.MetricsRegistry`` as gauges."""
+        for s in range(self.n_shards):
+            metrics.gauge("shard_live", {"shard": s}).set(
+                float(self._live[s].any()))
+        metrics.gauge("shard_coverage").set(self.coverage())
+        metrics.gauge("shard_failover").set(self.n_failover)
 
     def live_shards(self) -> list[int]:
         return [s for s in range(self.n_shards) if self._live[s].any()]
@@ -280,6 +317,65 @@ class ShardHealthRegistry:
             if alive.size:
                 mask[s, alive[0]] = True
         return mask.ravel()
+
+
+class DeadlineHealthChecker:
+    """Deadline-based shard health: a live replica whose last heartbeat is
+    older than ``deadline_s`` is automatically ``mark_dead``-ed.
+
+    This closes the loop the operator surface left open — ``kill_shard``
+    required someone to *notice* the failure; the checker notices.  Call
+    :meth:`check` from the serve loop (it is O(S·R) numpy reads — cheap per
+    batch) or a timer.  Deterministically testable: both the registry clock
+    and ``check(now=...)`` are injectable, so a fault schedule can age
+    heartbeats without sleeping.
+
+    With ``metrics``, every check refreshes ``shard_heartbeat_age_seconds
+    {shard}`` gauges (age of the *freshest* live replica — the quantity the
+    deadline compares against, per replica), bumps
+    ``shard_marked_dead_total`` per kill, emits a ``shard_deadline_expired``
+    structured event, and republishes the liveness gauges.
+    """
+
+    def __init__(self, registry: ShardHealthRegistry, deadline_s: float,
+                 metrics=None):
+        if deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0, got {deadline_s}")
+        self.registry = registry
+        self.deadline_s = float(deadline_s)
+        self.metrics = metrics
+        self.n_checks = 0
+        self.n_killed = 0
+
+    def check(self, now: Optional[float] = None) -> list[tuple[int, int]]:
+        """One sweep; returns the (shard, replica) slots killed this call."""
+        reg = self.registry
+        now = now if now is not None else reg.clock()
+        self.n_checks += 1
+        killed: list[tuple[int, int]] = []
+        for s in range(reg.n_shards):
+            for r in range(reg.n_replicas):
+                if not reg._live[s, r]:
+                    continue
+                age = reg.heartbeat_age(s, r, now=now)
+                if age > self.deadline_s:
+                    reg.mark_dead(s, r)
+                    killed.append((s, r))
+                    self.n_killed += 1
+                    if self.metrics is not None:
+                        self.metrics.counter("shard_marked_dead_total").inc()
+                        self.metrics.event(
+                            "shard_deadline_expired", shard=s, replica=r,
+                            age_s=age, deadline_s=self.deadline_s)
+            if self.metrics is not None:
+                live = np.where(reg._live[s])[0]
+                age_s = min((reg.heartbeat_age(s, r, now=now) for r in live),
+                            default=math.inf)
+                self.metrics.gauge("shard_heartbeat_age_seconds",
+                                   {"shard": s}).set(age_s)
+        if self.metrics is not None:
+            reg.publish(self.metrics)
+        return killed
 
 
 @dataclasses.dataclass(frozen=True)

@@ -26,15 +26,18 @@ from .types import EMQGIndex, GraphIndex
 
 
 def build_emqg(vectors, params: Optional[BuildParams] = None,
-               key: Optional[jax.Array] = None, verbose: bool = False) -> EMQGIndex:
-    """Full δ-EMQG build: Algorithm 4 with degree alignment + RaBitQ codes."""
+               key: Optional[jax.Array] = None, verbose: bool = False,
+               metrics=None) -> EMQGIndex:
+    """Full δ-EMQG build: Algorithm 4 with degree alignment + RaBitQ codes.
+    ``metrics``/``verbose`` forward to ``build_approx`` (structured build
+    progress events through the obs registry)."""
     if params is None:
         params = BuildParams(align_degree=True)
     elif not params.align_degree:
         params = dataclasses.replace(params, align_degree=True)
     if key is None:
         key = jax.random.PRNGKey(params.seed)
-    graph = build_approx(vectors, params, verbose=verbose)
+    graph = build_approx(vectors, params, verbose=verbose, metrics=metrics)
     codes = rabitq.fit(graph.vectors, key)
     return EMQGIndex(graph=graph, codes=codes)
 

@@ -38,6 +38,7 @@ import json
 import logging
 import os
 import re
+import time
 import zlib
 from typing import Callable, Optional
 
@@ -255,27 +256,45 @@ def _crc(arr: np.ndarray) -> int:
     return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
 
 
-def _atomic_write(path: str, data: bytes) -> None:
+def _atomic_write(path: str, data: bytes,
+                  fsync_hist=None) -> None:
+    """tmp + fsync + rename.  ``fsync_hist`` (an ``obs.Histogram``) times
+    the fsync alone — on real disks that is where WAL commit latency lives,
+    and it is the number a "why did p99 spike" investigation needs split
+    from serialization cost."""
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
         f.write(data)
         f.flush()
-        os.fsync(f.fileno())
+        if fsync_hist is not None:
+            t0 = time.perf_counter()
+            os.fsync(f.fileno())
+            fsync_hist.observe(time.perf_counter() - t0)
+        else:
+            os.fsync(f.fileno())
     os.replace(tmp, path)
 
 
 def wal_append(wal_dir: str, seq: int, op: str,
                payload: dict[str, np.ndarray],
-               fault_hook: Optional[Callable[[str], None]] = None) -> str:
+               fault_hook: Optional[Callable[[str], None]] = None,
+               metrics=None) -> str:
     """Append one committed record.  Payload npz lands first, the manifest
     (whose existence *is* the commit) second — a crash between the two
-    (the ``torn_journal`` fault point) leaves an uncommitted torn record."""
+    (the ``torn_journal`` fault point) leaves an uncommitted torn record.
+
+    ``metrics`` (an ``obs.MetricsRegistry``) times the whole append into
+    ``wal_append_seconds``, each fsync into ``wal_fsync_seconds``, and
+    counts ``wal_records_total{op}``."""
+    t_start = time.perf_counter()
+    fsync_hist = None if metrics is None else \
+        metrics.histogram("wal_fsync_seconds")
     os.makedirs(wal_dir, exist_ok=True)
     base = os.path.join(wal_dir, f"wal_{seq:09d}")
     import io
     buf = io.BytesIO()
     np.savez(buf, **payload)
-    _atomic_write(base + ".npz", buf.getvalue())
+    _atomic_write(base + ".npz", buf.getvalue(), fsync_hist=fsync_hist)
     if fault_hook is not None:
         fault_hook("torn_journal")
     manifest = {
@@ -286,7 +305,12 @@ def wal_append(wal_dir: str, seq: int, op: str,
         "shapes": {k: list(v.shape) for k, v in payload.items()},
         "checksums": {k: _crc(v) for k, v in payload.items()},
     }
-    _atomic_write(base + ".json", json.dumps(manifest).encode())
+    _atomic_write(base + ".json", json.dumps(manifest).encode(),
+                  fsync_hist=fsync_hist)
+    if metrics is not None:
+        metrics.histogram("wal_append_seconds").observe(
+            time.perf_counter() - t_start)
+        metrics.counter("wal_records_total", {"op": op}).inc()
     return base + ".json"
 
 
@@ -373,13 +397,18 @@ class JournaledLiveIndex:
     def __init__(self, live: LiveIndex, directory: str, *,
                  seq: int = 0, consolidate_frac: float = 0.3,
                  keep_checkpoints: int = 3,
-                 fault_hook: Optional[Callable[[str], None]] = None):
+                 fault_hook: Optional[Callable[[str], None]] = None,
+                 metrics=None):
         self.live = live
         self.directory = directory
         self.seq = seq
         self.consolidate_frac = consolidate_frac
         self.keep_checkpoints = keep_checkpoints
         self.fault_hook = fault_hook
+        # obs.MetricsRegistry (or None): WAL append/fsync + checkpoint
+        # save/restore timings, wal_records_total{op} — purely additive,
+        # recovery semantics are identical with metrics on or off
+        self.metrics = metrics
         self.wal_dir = os.path.join(directory, "wal")
         self.ckpt_dir = os.path.join(directory, "ckpt")
 
@@ -416,8 +445,12 @@ class JournaledLiveIndex:
         records no retained checkpoint still needs (older snapshots kept by
         ``keep_checkpoints`` must stay replayable — if the newest snapshot
         is later found corrupt, recovery walks back and rolls forward)."""
+        t0 = time.perf_counter()
         path = save_checkpoint(self.ckpt_dir, self.seq, self._tree(),
                                keep=self.keep_checkpoints)
+        if self.metrics is not None:
+            self.metrics.histogram("checkpoint_save_seconds").observe(
+                time.perf_counter() - t0)
         steps = list_steps(self.ckpt_dir)
         if steps:
             _truncate_wal(self.wal_dir, min(steps))
@@ -431,7 +464,7 @@ class JournaledLiveIndex:
     def _mutate(self, op: str, payload: dict[str, np.ndarray]) -> None:
         self._fault("before_journal")
         wal_append(self.wal_dir, self.seq + 1, op, payload,
-                   fault_hook=self.fault_hook)
+                   fault_hook=self.fault_hook, metrics=self.metrics)
         self._fault("after_journal")
         self.live = _apply_op(self.live, op, payload,
                               fault_hook=self.fault_hook)
@@ -457,7 +490,7 @@ class JournaledLiveIndex:
         return self.live.n_live
 
 
-def recover(directory: str) -> tuple[JournaledLiveIndex, dict]:
+def recover(directory: str, metrics=None) -> tuple[JournaledLiveIndex, dict]:
     """Rebuild a ``JournaledLiveIndex`` from disk after a crash.
 
     Restores the newest intact checkpoint (corrupt steps walk back inside
@@ -465,8 +498,12 @@ def recover(directory: str) -> tuple[JournaledLiveIndex, dict]:
     replay stops at the first missing or torn record (= the op the crash
     interrupted before its commit point — by WAL semantics it never
     happened).  Returns ``(journal, info)`` where ``info`` reports the
-    checkpoint step used, the records replayed, and any torn record seen.
+    checkpoint step used, the records replayed, any torn record seen, and
+    the restore wall time (``elapsed_s`` — also observed into
+    ``checkpoint_restore_seconds`` when ``metrics`` is given; the returned
+    journal keeps the registry for its own WAL/checkpoint timings).
     """
+    t_start = time.perf_counter()
     with open(os.path.join(directory, "meta.json")) as f:
         meta = json.load(f)
     params = BuildParams(**meta["params"])
@@ -504,7 +541,11 @@ def recover(directory: str) -> tuple[JournaledLiveIndex, dict]:
         live = _apply_op(live, op, payload)
         seq += 1
         info["replayed"] += 1
+    info["elapsed_s"] = time.perf_counter() - t_start
+    if metrics is not None:
+        metrics.histogram("checkpoint_restore_seconds").observe(
+            info["elapsed_s"])
     journal = JournaledLiveIndex(
         live, directory, seq=seq,
-        consolidate_frac=meta.get("consolidate_frac", 0.3))
+        consolidate_frac=meta.get("consolidate_frac", 0.3), metrics=metrics)
     return journal, info

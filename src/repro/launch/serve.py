@@ -10,6 +10,16 @@ ladder, circuit-breaker fallback — see ``repro.serve.resilience``) and
 reports the resilience counters plus the worst δ error bound any response
 was served under.
 
+``--metrics`` attaches the unified observability layer (``repro.obs``):
+the server emits the standard serve taxonomy (request-latency / queue-wait
+histograms with p50/p95/p99, per-status response counters, degradation /
+breaker transition counters, batch-aggregated ``n_dist_comps``/``n_hops``
+Exp-5 counters, shard-liveness gauges, WAL timing families) plus
+per-request spans, and the run ends with a Prometheus-text and a JSON
+snapshot on stdout.  ``--metrics-every S`` additionally prints a one-line
+stderr summary at most every S seconds while draining (implies
+``--metrics``).
+
 At production scale the same loop drives ``core.distributed``'s sharded
 index across the mesh (see examples/vector_serve.py for the multi-shard
 CPU demonstration)."""
@@ -25,6 +35,14 @@ import numpy as np
 from repro.core import BuildParams, SearchParams, build_emqg
 from repro.core.distances import brute_force_knn
 from repro.data import clustered_vectors
+from repro.obs import (
+    MetricsRegistry,
+    PeriodicSummary,
+    Tracer,
+    declare_serve_metrics,
+    to_json,
+    to_prometheus,
+)
 from repro.serve import AnnServer, ResilienceConfig, ResilientAnnServer
 
 
@@ -56,15 +74,28 @@ def main(argv=None) -> int:
                     help="run the graph-invariant auditor (core.verify) on "
                          "the built index before serving; non-zero exit on "
                          "violations")
+    ap.add_argument("--metrics", action="store_true",
+                    help="attach the obs layer; print Prometheus-text and "
+                         "JSON metric snapshots after serving")
+    ap.add_argument("--metrics-every", type=float, default=0.0,
+                    help="emit a one-line stderr metrics summary at most "
+                         "every S seconds while serving (implies --metrics)")
     args = ap.parse_args(argv)
+
+    registry = tracer = summary = None
+    if args.metrics or args.metrics_every > 0:
+        registry = declare_serve_metrics(MetricsRegistry())
+        tracer = Tracer()
+        summary = PeriodicSummary(registry, args.metrics_every)
 
     print(f"[serve] building δ-EMQG over n={args.n} d={args.dim} …")
     base = clustered_vectors(args.n, args.dim, 48, seed=0)
-    t0 = time.time()
+    t0 = time.perf_counter()
     idx = build_emqg(base, BuildParams(
         max_degree=args.max_degree, beam_width=args.beam, delta=args.delta,
-        t=args.beam // 2, iters=2, block=1024, align_degree=True))
-    print(f"[serve] built in {time.time() - t0:.1f}s "
+        t=args.beam // 2, iters=2, block=1024, align_degree=True),
+        metrics=registry)
+    print(f"[serve] built in {time.perf_counter() - t0:.1f}s "
           f"(mean degree {float(np.asarray(idx.graph.degrees()).mean()):.1f})")
 
     if args.audit:
@@ -78,6 +109,22 @@ def main(argv=None) -> int:
     gt_d, gt_i = brute_force_knn(queries, base, args.k)
     params = SearchParams(k=args.k, l0=args.k, l_max=256, alpha=args.alpha,
                           adaptive=True, max_hops=2048)
+
+    def drive(srv, queries):
+        """Submit + drain, chunked when a periodic summary is live so the
+        heartbeat can fire between batches of a long replay."""
+        if summary is None or summary.every_s <= 0:
+            srv.submit_many(queries)
+            return srv.drain()
+        out = []
+        chunk = max(srv.max_batch, 1)
+        for s in range(0, len(queries), chunk):
+            srv.submit_many(queries[s : s + chunk])
+            out.extend(srv.drain())
+            summary.tick()
+        summary.tick(force=True)
+        return out
+
     if args.resilient:
         cfg = ResilienceConfig(
             max_queue=args.max_queue,
@@ -86,9 +133,9 @@ def main(argv=None) -> int:
             degrade_depth=args.degrade_at, recover_depth=args.recover_at,
             n_rungs=args.rungs)
         srv = ResilientAnnServer(idx, params, config=cfg,
-                                 max_batch=128, buckets=(32, 128))
-        srv.submit_many(queries)
-        responses = srv.drain()
+                                 max_batch=128, buckets=(32, 128),
+                                 metrics=registry, tracer=tracer)
+        responses = drive(srv, queries)
         served = [(i, r) for i, r in enumerate(responses) if r.ok]
         ids = np.stack([r.ids for _, r in served]) if served else np.zeros((0, args.k))
         rec = np.mean([
@@ -106,11 +153,12 @@ def main(argv=None) -> int:
               f"fallback={s.n_fallback} deadline_missed={s.n_deadline_missed} "
               f"failed={s.n_failed}; worst δ bound="
               f"{worst if math.isfinite(worst) else 'unbounded (δ unknown)'}")
+        _dump_metrics(registry, tracer)
         return 0
 
-    srv = AnnServer(idx, params, max_batch=128, buckets=(32, 128))
-    srv.submit_many(queries)
-    results = srv.drain()
+    srv = AnnServer(idx, params, max_batch=128, buckets=(32, 128),
+                    metrics=registry, tracer=tracer)
+    results = drive(srv, queries)
     ids = np.stack([r[0] for r in results])
     rec = np.mean([len(set(ids[i].tolist()) & set(gt_i[i].tolist())) / args.k
                    for i in range(len(results))])
@@ -118,7 +166,17 @@ def main(argv=None) -> int:
           f"{srv.stats.n_batches} batches; recall@{args.k}={rec:.4f}; "
           f"QPS={srv.stats.qps:.1f} (CPU proxy); "
           f"p_max_latency={srv.stats.max_latency_s * 1e3:.1f} ms")
+    _dump_metrics(registry, tracer)
     return 0
+
+
+def _dump_metrics(registry, tracer) -> None:
+    if registry is None:
+        return
+    print("=== metrics (prometheus text) ===")
+    print(to_prometheus(registry), end="")
+    print("=== metrics (json) ===")
+    print(to_json(registry, tracer))
 
 
 if __name__ == "__main__":

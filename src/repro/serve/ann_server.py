@@ -17,11 +17,24 @@ an error-bounded degradation ladder whose circuit breaker bottoms out at
 ``(beam, jnp, beam_width=1)`` — greedy best-first on the production engine.
 
 Clocks: every request records two timestamps — ``arrival_t``, the *logical*
-arrival time (caller-supplied when replaying a trace, else wall clock), and
-``wall_t``, the wall-clock submit time.  Latency accounting uses the wall
-clock on both ends (submit → completion); logical arrivals only order the
-replay.  Mixing the two (synthetic arrival minus wall-clock completion)
-produced nonsense latencies — don't reintroduce it.
+arrival time (caller-supplied when replaying a trace, else the submit
+instant), and ``wall_t``, the **monotonic** submit time
+(``time.perf_counter`` via ``obs.Timer``).  All latency accounting is
+two-point monotonic arithmetic (submit → completion); logical arrivals only
+order the replay.  The stepping wall clock is banned from this package (CI
+grep-lint rejects any ``time.<wall-clock>()`` call): it steps under NTP, and
+the seed's wall-clock subtraction could report negative latencies after a
+slew.
+
+Observability: pass ``metrics=`` (an ``obs.MetricsRegistry``) and/or
+``tracer=`` (an ``obs.Tracer``) to get the standard serve taxonomy —
+request-latency / queue-wait / batch-execute histograms, per-status response
+counters, batch-aggregated device counters (``n_dist_comps``/``n_hops``/…,
+the Exp-5 metrics at serve time) — and per-request spans (``serve.request``
+with a ``serve.queue_wait`` child) linked to per-batch spans
+(``serve.batch`` → ``serve.batch_form`` / ``serve.device_execute`` /
+``serve.merge``).  Both default to ``None`` = zero overhead, and enabling
+them cannot change results (pinned bit-identical in ``tests/test_obs.py``).
 
 Single-process implementation (threads would add nothing in a test
 container); the ``submit_many`` / ``drain`` pair models the arrival loop so
@@ -31,7 +44,6 @@ benchmarks can replay request traces with arrival timestamps.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Optional
 
 import jax.numpy as jnp
@@ -43,6 +55,13 @@ from repro.core import (
     SearchParams,
     probing_search,
     search,
+)
+from repro.obs import (
+    DEFAULT_WORK_BUCKETS,
+    MetricsRegistry,
+    Timer,
+    Tracer,
+    record_search_result,
 )
 
 
@@ -76,7 +95,7 @@ class ServeStats:
 
 @dataclasses.dataclass
 class _Request:
-    """A queued request: logical arrival (trace clock) + wall-clock submit."""
+    """A queued request: logical arrival (trace clock) + monotonic submit."""
 
     arrival_t: float
     wall_t: float
@@ -87,7 +106,9 @@ class _Request:
 class AnnServer:
     def __init__(self, index: GraphIndex | EMQGIndex, params: SearchParams,
                  max_batch: int = 64, buckets: tuple[int, ...] = (8, 32, 64),
-                 engine: str = "beam", backend: str = "auto"):
+                 engine: str = "beam", backend: str = "auto",
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
         if engine != "beam":
             raise ValueError(f"unknown engine: {engine!r}")
         self.index = index
@@ -98,6 +119,8 @@ class AnnServer:
         self.quantized = isinstance(index, EMQGIndex)
         self.engine = engine
         self.backend = backend
+        self.metrics = metrics
+        self.tracer = tracer
         self._queue: list[_Request] = []
         self._seq = 0
         self.stats = ServeStats()
@@ -119,9 +142,44 @@ class AnnServer:
             return probing_search(self.index, queries, params, backend=backend)
         return search(self.index, queries, params, backend=backend)
 
+    # -- observability seams -------------------------------------------------
+    def _obs_batch(self, n_live: int, res, exec_s: float) -> None:
+        """Batch-level metrics: execute-time histogram, batch size, and the
+        device-side work counters aggregated host-side (Exp-5 at serve
+        time).  ``n_live`` excludes pad rows from the aggregation."""
+        if self.metrics is None:
+            return
+        self.metrics.histogram("serve_batch_execute_seconds").observe(exec_s)
+        self.metrics.histogram("serve_batch_size",
+                               buckets=DEFAULT_WORK_BUCKETS).observe(n_live)
+        if res is not None:
+            record_search_result(self.metrics, res, n_live=n_live)
+
+    def _obs_response(self, req: _Request, dispatch_t: float, done_t: float,
+                      status: str, batch_span=None) -> None:
+        """Per-request metrics + retroactive request/queue-wait spans."""
+        if self.metrics is not None:
+            self.metrics.counter("serve_responses_total",
+                                 {"status": status}).inc()
+            if status in ("ok", "failed"):
+                self.metrics.histogram(
+                    "serve_request_latency_seconds").observe(
+                        done_t - req.wall_t)
+                self.metrics.histogram("serve_queue_wait_seconds").observe(
+                    max(dispatch_t - req.wall_t, 0.0))
+        if self.tracer is not None:
+            rspan = self.tracer.start_span(
+                "serve.request", seq=req.seq, status=status,
+                batch=None if batch_span is None else batch_span.span_id)
+            rspan.start = req.wall_t
+            qspan = self.tracer.start_span("serve.queue_wait", parent=rspan)
+            qspan.start = req.wall_t
+            self.tracer.end_span(qspan, end=dispatch_t)
+            self.tracer.end_span(rspan, end=done_t)
+
     # -- request path -------------------------------------------------------
     def submit(self, query: np.ndarray, arrival_t: Optional[float] = None):
-        wall = time.time()
+        wall = Timer.now()
         self._queue.append(_Request(
             arrival_t=arrival_t if arrival_t is not None else wall,
             wall_t=wall, query=np.asarray(query, np.float32), seq=self._seq))
@@ -143,25 +201,41 @@ class AnnServer:
         """Serve everything queued; returns [(ids, dists)] per request in
         submission order."""
         out = []
+        tr = self.tracer
         while self._queue:
             take = self._queue[: self.max_batch]
             self._queue = self._queue[self.max_batch:]
+            bspan = tr.start_span("serve.batch") if tr else None
+            fspan = tr.start_span("serve.batch_form", parent=bspan) \
+                if tr else None
             qs = np.stack([r.query for r in take])
             bucket = self._bucket(len(take))
             pad = bucket - len(take)
             if pad:
                 qs = np.concatenate([qs, np.repeat(qs[-1:], pad, axis=0)])
-            t0 = time.time()
+            if tr:
+                tr.end_span(fspan, size=len(take), bucket=bucket)
+            espan = tr.start_span("serve.device_execute", parent=bspan,
+                                  backend=self.backend) if tr else None
+            t0 = Timer.now()
             res = self._search(jnp.asarray(qs))
             ids = np.asarray(res.ids)
             dists = np.asarray(res.dists)
-            t1 = time.time()
+            t1 = Timer.now()
+            if tr:
+                tr.end_span(espan)
+            self._obs_batch(len(take), res, t1 - t0)
+            mspan = tr.start_span("serve.merge", parent=bspan) if tr else None
             for i, req in enumerate(take):
                 out.append((ids[i], dists[i]))
                 lat = t1 - req.wall_t
                 self.stats.n_requests += 1
                 self.stats.total_latency_s += lat
                 self.stats.max_latency_s = max(self.stats.max_latency_s, lat)
+                self._obs_response(req, t0, t1, "ok", batch_span=bspan)
+            if tr:
+                tr.end_span(mspan)
+                tr.end_span(bspan, size=len(take))
             self.stats.n_batches += 1
             self.stats.total_search_s += t1 - t0
         return out

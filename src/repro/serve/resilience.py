@@ -34,6 +34,19 @@ Containment layers, outermost first:
 Everything is single-threaded and deterministically testable: the breaker
 takes an injectable clock and the fault harness (``repro.testing.faults``)
 wraps the one seam every batch passes through (``AnnServer._search``).
+
+Observability (``metrics=`` / ``tracer=``, inherited from ``AnnServer``):
+on top of the base serve taxonomy, the resilience layer emits *structured
+transition events* — every degradation-ladder step records
+``serve_degradation_transition`` (rung, direction, queue-depth reason, and
+the ``1/(δ·α)`` bound now in force) and every circuit-breaker tier move
+records ``serve_breaker_transition`` (from/to tier) — alongside labeled
+counters (``serve_degradation_transitions_total{direction,rung}``,
+``serve_breaker_transitions_total{from,to}``) and a ``serve_rung`` gauge,
+so the blind spots the ad-hoc ``ServeStats`` totals left (when did we
+degrade, why, under what bound) are first-class telemetry.  All clocks are
+monotonic (``obs.Timer``); deadlines are absolute ``perf_counter``
+instants.
 """
 
 from __future__ import annotations
@@ -47,6 +60,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import EMQGIndex, SearchParams, SearchResult
+from repro.obs import Timer
 
 from .ann_server import AnnServer, _Request
 
@@ -288,6 +302,7 @@ class ResilientAnnServer(AnnServer):
         self.rung = 0
         self._done: list[Response] = []
         self._last_tier: Optional[int] = None
+        self._last_result = None            # full SearchResult of last batch
         self._last_coverage: float = 1.0
         self._last_max_missed: int = 0
 
@@ -297,17 +312,23 @@ class ResilientAnnServer(AnnServer):
         """Queue a request.  Returns the terminal ``Response`` immediately if
         it was rejected or shed (also delivered again by ``drain()``), else
         ``None`` — the result arrives from ``drain()``."""
-        wall = time.time()
+        wall = Timer.now()
         seq = self._seq
         self._seq += 1
         reason = validate_query(query, self.index.dim)
         if reason is not None:
             self.stats.n_rejected += 1
+            if self.metrics is not None:
+                self.metrics.counter("serve_responses_total",
+                                     {"status": "rejected"}).inc()
             resp = Response(seq=seq, status="rejected", error=reason)
             self._done.append(resp)
             return resp
         if len(self._queue) >= self.config.max_queue:
             self.stats.n_shed += 1
+            if self.metrics is not None:
+                self.metrics.counter("serve_responses_total",
+                                     {"status": "shed"}).inc()
             resp = Response(seq=seq, status="shed",
                             error=f"queue full ({self.config.max_queue})")
             self._done.append(resp)
@@ -323,10 +344,22 @@ class ResilientAnnServer(AnnServer):
 
     # -- degradation ladder --------------------------------------------------
     def _adjust_rung(self, depth: int) -> None:
+        old = self.rung
         if depth > self.config.degrade_depth:
             self.rung = min(self.rung + 1, len(self.ladder) - 1)
         elif depth < self.config.recover_depth:
             self.rung = max(self.rung - 1, 0)
+        if self.metrics is not None and self.rung != old:
+            direction = "down" if self.rung > old else "up"
+            self.metrics.counter(
+                "serve_degradation_transitions_total",
+                {"direction": direction, "rung": str(self.rung)}).inc()
+            self.metrics.event(
+                "serve_degradation_transition",
+                from_rung=old, rung=self.rung, direction=direction,
+                reason=f"queue_depth={depth}",
+                delta_bound=self.ladder.delta_bound(self.rung))
+            self.metrics.gauge("serve_rung").set(self.rung)
 
     # -- failure containment around the hot path -----------------------------
     def _search_contained(self, qs: np.ndarray, params: SearchParams):
@@ -344,6 +377,15 @@ class ResilientAnnServer(AnnServer):
             i, tier = self.breaker.current()
             if self._last_tier is not None and i != self._last_tier:
                 self.stats.n_fallback += 1
+                if self.metrics is not None:
+                    prev = self.breaker.tiers[self._last_tier].name
+                    self.metrics.counter(
+                        "serve_breaker_transitions_total",
+                        {"from": prev, "to": tier.name}).inc()
+                    self.metrics.event("serve_breaker_transition",
+                                       from_tier=prev, to_tier=tier.name,
+                                       reason="tier_open"
+                                       if i > self._last_tier else "recovery")
             self._last_tier = i
             try:
                 tier_params = params if tier.beam_width is None else \
@@ -353,6 +395,7 @@ class ResilientAnnServer(AnnServer):
                 out = (np.asarray(res.ids), np.asarray(res.dists),
                        np.asarray(res.saturated))
                 self.breaker.record_success(i)
+                self._last_result = res     # device counters for _obs_batch
                 return out, tier.name
             except Exception as e:
                 last_err = e
@@ -372,16 +415,23 @@ class ResilientAnnServer(AnnServer):
         ``status="failed"`` responses with the error attached."""
         out = self._done
         self._done = []
+        tr = self.tracer
         while self._queue:
             self._adjust_rung(len(self._queue))
             take = self._queue[: self.max_batch]
             self._queue = self._queue[self.max_batch:]
 
-            now = time.time()
+            bspan = tr.start_span("serve.batch", rung=self.rung) \
+                if tr else None
+            fspan = tr.start_span("serve.batch_form", parent=bspan) \
+                if tr else None
+            now = Timer.now()
             live = []
             for req in take:
                 if now > req.deadline_t:
                     self.stats.n_deadline_missed += 1
+                    self._obs_response(req, now, now, "deadline",
+                                       batch_span=bspan)
                     out.append(Response(
                         seq=req.seq, status="deadline",
                         latency_s=now - req.wall_t,
@@ -389,6 +439,9 @@ class ResilientAnnServer(AnnServer):
                 else:
                     live.append(req)
             if not live:
+                if tr:
+                    tr.end_span(fspan, size=0)
+                    tr.end_span(bspan, size=0)
                 continue
 
             qs = np.stack([r.query for r in live])
@@ -399,21 +452,41 @@ class ResilientAnnServer(AnnServer):
             rung = self.rung
             params = self.ladder.params(rung)
             bound = self.ladder.delta_bound(rung)
-            t0 = time.time()
+            if tr:
+                tr.end_span(fspan, size=len(live), bucket=bucket)
+            espan = None
+            if tr:
+                espan = tr.start_span("serve.device_execute", parent=bspan,
+                                      rung=rung)
+                tr.activate(espan)      # shard fan-out spans nest under it
+            t0 = Timer.now()
             try:
                 (ids, dists, sat), tier_name = \
                     self._search_contained(qs, params)
             except SearchFailure as e:
-                t1 = time.time()
+                t1 = Timer.now()
+                if tr:
+                    tr.deactivate(espan)
+                    tr.end_span(espan, error=str(e))
+                self._obs_batch(len(live), None, t1 - t0)
                 for req in live:
                     self.stats.n_failed += 1
+                    self._obs_response(req, t0, t1, "failed",
+                                       batch_span=bspan)
                     out.append(Response(seq=req.seq, status="failed",
                                         rung=rung, latency_s=t1 - req.wall_t,
                                         error=str(e)))
                 self.stats.n_batches += 1
                 self.stats.total_search_s += t1 - t0
+                if tr:
+                    tr.end_span(bspan, size=len(live), status="failed")
                 continue
-            t1 = time.time()
+            t1 = Timer.now()
+            if tr:
+                tr.deactivate(espan)
+                tr.end_span(espan, tier=tier_name)
+            self._obs_batch(len(live), self._last_result, t1 - t0)
+            mspan = tr.start_span("serve.merge", parent=bspan) if tr else None
             for i, req in enumerate(live):
                 lat = t1 - req.wall_t
                 missed = t1 > req.deadline_t
@@ -424,6 +497,7 @@ class ResilientAnnServer(AnnServer):
                     self.stats.n_degraded += 1
                 if missed:
                     self.stats.n_deadline_missed += 1
+                self._obs_response(req, t0, t1, "ok", batch_span=bspan)
                 out.append(Response(
                     seq=req.seq, status="ok", ids=ids[i], dists=dists[i],
                     rung=rung, delta_bound=bound, tier=tier_name,
@@ -432,6 +506,9 @@ class ResilientAnnServer(AnnServer):
                     max_missed=self._last_max_missed))
             self.stats.n_batches += 1
             self.stats.total_search_s += t1 - t0
+            if tr:
+                tr.end_span(mspan)
+                tr.end_span(bspan, size=len(live), tier=tier_name)
         out.sort(key=lambda r: r.seq)
         return out
 
@@ -463,14 +540,21 @@ class ShardedResilientAnnServer(ResilientAnnServer):
                  merge: str = "all_gather", quantized: bool = False,
                  n_replicas: int = 1,
                  config: ResilienceConfig = ResilienceConfig(),
-                 clock=time.monotonic, **kw):
-        from repro.core.distributed import (FaultTolerantShardedSearch,
+                 clock=time.monotonic, health_deadline_s=None, **kw):
+        from repro.core.distributed import (DeadlineHealthChecker,
+                                            FaultTolerantShardedSearch,
                                             ShardHealthRegistry)
         super().__init__(sidx, params, config=config, clock=clock,
                          engine="beam", backend="auto", **kw)
         self.quantized = quantized          # ShardedIndex defeats isinstance
         self.registry = ShardHealthRegistry(sidx.n_shards // n_replicas,
-                                            n_replicas)
+                                            n_replicas, clock=clock)
+        # deadline-based health checking: replicas heartbeat via
+        # ``heartbeat()``; a stale one is auto-mark_dead-ed before the next
+        # batch dispatches (None → explicit kill_shard/revive_shard only)
+        self.health_checker = None if health_deadline_s is None else \
+            DeadlineHealthChecker(self.registry, health_deadline_s,
+                                  metrics=self.metrics)
         merges = [merge]
         other = "ring" if merge == "all_gather" else "all_gather"
         if len(shard_axes) == 1 and other not in merges:
@@ -494,6 +578,11 @@ class ShardedResilientAnnServer(ResilientAnnServer):
     def revive_shard(self, shard: int, replica: int = 0) -> None:
         self.registry.mark_live(shard, replica)
 
+    def heartbeat(self, shard: int, replica: int = 0) -> None:
+        """Liveness signal from a shard's host (the transport layer would
+        call this); consumed by the deadline health checker."""
+        self.registry.heartbeat(shard, replica)
+
     @property
     def coverage(self) -> float:
         return self.registry.coverage()
@@ -507,7 +596,28 @@ class ShardedResilientAnnServer(ResilientAnnServer):
             return super()._search(queries, params=params, engine=engine,
                                    backend=backend)
         merge = backend if backend in self._ft else next(iter(self._ft))
+        if self.health_checker is not None:
+            self.health_checker.check()     # stale heartbeats → mark_dead
+        tr = self.tracer
+        if tr is not None:
+            # fan-out spans: one child per logical shard under a fanout
+            # parent (itself a child of the batch's device_execute span via
+            # the tracer stack when drain uses it, else standalone).  The
+            # shard_map collective is lock-step, so every shard child spans
+            # the same interval; the payload is the liveness attribution.
+            fanout = tr.start_span("serve.shard_fanout", merge=merge)
+            shard_spans = [
+                tr.start_span("shard", parent=fanout, shard=s,
+                              live=bool(self.registry._live[s].any()))
+                for s in range(self.registry.n_shards)]
         r = self._ft[merge](queries, params)
+        if tr is not None:
+            for ss in shard_spans:
+                tr.end_span(ss)
+            tr.end_span(fanout, coverage=r.coverage,
+                        max_missed=r.max_missed)
+        if self.metrics is not None:
+            self.registry.publish(self.metrics)
         self._last_coverage = r.coverage
         self._last_max_missed = r.max_missed
         B = r.ids.shape[0]

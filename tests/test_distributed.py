@@ -263,3 +263,121 @@ assert all(r.ok and r.tier == "sharded/ring" and r.coverage == 1.0
 print("OK")
 """)
     assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Deadline-based health checking (host-side: the registry/checker are pure
+# numpy with injectable clocks, so no device subprocess is needed).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.faults
+def test_deadline_checker_kills_stale_replica_only():
+    from repro.core.distributed import (DeadlineHealthChecker,
+                                        ShardHealthRegistry)
+    from repro.obs import MetricsRegistry, snapshot
+
+    t = {"now": 0.0}
+    reg = ShardHealthRegistry(4, n_replicas=2, clock=lambda: t["now"])
+    m = MetricsRegistry()
+    hc = DeadlineHealthChecker(reg, deadline_s=5.0, metrics=m)
+    assert hc.check() == []                   # everything fresh at t=0
+
+    t["now"] = 3.0                            # all beat except (1, 1) …
+    for s in range(4):
+        for r in range(2):
+            if (s, r) != (1, 1):
+                reg.heartbeat(s, r)
+    t["now"] = 7.0                            # (1,1) age 7 > 5; rest age 4
+    assert hc.check() == [(1, 1)]
+    assert reg.coverage() == 1.0              # replica 0 still covers shard 1
+    assert hc.n_killed == 1
+
+    snap = snapshot(m)
+    assert snap["counters"]["shard_marked_dead_total"] == 1
+    assert snap["gauges"]['shard_live{shard="1"}'] == 1.0
+    # gauge tracks the freshest LIVE replica's age
+    assert abs(snap["gauges"]['shard_heartbeat_age_seconds{shard="1"}']
+               - 4.0) < 1e-9
+    evts = [e for e in snap["events"] if e["name"] == "shard_deadline_expired"]
+    assert len(evts) == 1
+    assert evts[0]["shard"] == 1 and evts[0]["replica"] == 1
+    assert evts[0]["age_s"] > 5.0
+
+    t["now"] = 10.0                           # now every survivor is stale
+    killed = hc.check()
+    assert (1, 1) not in killed               # dead slots are not re-killed
+    assert len(killed) == 7
+    assert reg.coverage() == 0.0
+    assert snapshot(m)["gauges"]["shard_coverage"] == 0.0
+
+
+@pytest.mark.faults
+def test_zombie_heartbeat_does_not_revive_dead_slot():
+    from repro.core.distributed import (DeadlineHealthChecker,
+                                        ShardHealthRegistry)
+
+    t = {"now": 0.0}
+    reg = ShardHealthRegistry(2, clock=lambda: t["now"])
+    hc = DeadlineHealthChecker(reg, deadline_s=1.0)
+    t["now"] = 2.0
+    assert len(hc.check()) == 2
+    reg.heartbeat(0)                          # zombie's late beat: no revival
+    assert reg.dead_shards() == [0, 1]
+    assert hc.check() == []
+    reg.mark_live(0)                          # explicit revival refreshes beat
+    assert reg.live_shards() == [0]
+    assert hc.check() == []                   # … so it is not instantly re-killed
+
+    with pytest.raises(ValueError):
+        DeadlineHealthChecker(reg, deadline_s=0.0)
+
+
+@pytest.mark.faults
+def test_sharded_server_health_deadline_auto_marks_dead():
+    """Integration: a ShardedResilientAnnServer with ``health_deadline_s``
+    auto-kills a shard whose heartbeats stop, degrading coverage explicitly
+    on the next drain — no operator kill_shard needed."""
+    out = _run("""
+from repro.core import BuildParams, SearchParams
+from repro.core.distributed import build_sharded
+from repro.obs import MetricsRegistry, snapshot
+from repro.serve import ResilienceConfig, ShardedResilientAnnServer
+rng = np.random.default_rng(0)
+X = rng.normal(size=(512, 16)).astype(np.float32)
+Q = rng.normal(size=(12, 16)).astype(np.float32)
+mesh = jax.make_mesh((4,), ("data",))
+sidx = build_sharded(X, 4, BuildParams(max_degree=12, beam_width=24, t=8,
+                                       iters=1, block=512))
+params = SearchParams(k=5, l0=8, l_max=32, adaptive=False, max_hops=256,
+                      beam_width=1)
+t = {"now": 0.0}
+m = MetricsRegistry()
+srv = ShardedResilientAnnServer(sidx, params, mesh,
+                                config=ResilienceConfig(backoff_s=0.0),
+                                clock=lambda: t["now"],
+                                health_deadline_s=5.0, metrics=m)
+srv.submit_many(Q)
+rs = srv.drain()
+assert all(r.ok and r.coverage == 1.0 for r in rs)
+
+t["now"] = 4.0
+for s in (0, 1, 3):
+    srv.heartbeat(s)                 # shard 2 goes silent
+t["now"] = 7.0                       # age(2) = 7 > 5; others 3 < 5
+srv.submit_many(Q)
+rs = srv.drain()                     # checker sweeps before dispatch
+assert srv.health_checker.n_killed == 1
+assert all(r.ok and abs(r.coverage - 3/4) < 1e-9 for r in rs)
+snap = snapshot(m)
+assert snap["counters"]["shard_marked_dead_total"] == 1
+assert snap["gauges"]['shard_live{shard="2"}'] == 0.0
+assert abs(snap["gauges"]["shard_coverage"] - 3/4) < 1e-9
+
+srv.revive_shard(2)                  # explicit revival refreshes the beat
+srv.submit_many(Q)
+rs = srv.drain()
+assert all(r.ok and r.coverage == 1.0 for r in rs)
+print("OK")
+""", n_devices=4)
+    assert "OK" in out
