@@ -14,7 +14,9 @@ Public API:
     Distribution:      build_sharded, build_replicated, make_sharded_search,
                        ShardHealthRegistry, FaultTolerantShardedSearch
     Maintenance:       updates.JournaledLiveIndex (WAL + crash recovery),
-                       verify.audit (graph-invariant auditor)
+                       verify.audit (graph-invariant auditor),
+                       repair.RepairController + repair.ShardVectorStore
+                       (self-healing shard re-replication)
     Theory probes:     local_optimum_mask, theorem4_delta_prime
 """
 
@@ -43,4 +45,4 @@ from .probing import (  # noqa: F401
     probing_search,
 )
 from . import baselines, bitset, distances, distributed, geometry, rabitq  # noqa: F401
-from . import filtered, mips, updates, verify  # noqa: F401  (beyond-paper features)
+from . import filtered, mips, repair, updates, verify  # noqa: F401  (beyond-paper features)

@@ -72,13 +72,19 @@ class ShardedIndex:
 
     ``index`` leaves have leading dim S.  ``offsets`` is int32[S] — global id
     of local row 0 in each shard.  Shards must be equal-sized (pad the last
-    shard by repeating its first row; duplicate results are dedup-safe
-    because merge keeps the closer copy and ids are identical).
+    shard by repeating its first row).  ``sizes`` is int32[S] — the number of
+    *real* (non-pad) rows in each slot: local ids ``>= sizes[s]`` are pad
+    copies of local row 0, and the merge masks them out exactly like
+    dead-shard candidates (``id=-1, dist=inf``) — a pad can never leak a
+    global id ``>= n_total`` or duplicate its source row's id (the source
+    row itself competes in the same local top-k at the same distance).
+    ``sizes=None`` (legacy / abstract indexes) treats every row as real.
     """
 
     index: GraphIndex | EMQGIndex
     offsets: jax.Array
     n_total: int = static_field(default=0)
+    sizes: Optional[jax.Array] = None
 
     @property
     def n_shards(self) -> int:
@@ -95,11 +101,50 @@ class ShardedIndex:
         return float(getattr(g, "delta", 0.0))
 
 
-def stack_indices(indices: Sequence, offsets: Sequence[int], n_total: int) -> ShardedIndex:
+def stack_indices(indices: Sequence, offsets: Sequence[int], n_total: int,
+                  sizes: Optional[Sequence[int]] = None) -> ShardedIndex:
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *indices)
+    offsets = jnp.asarray(offsets, jnp.int32)
+    if sizes is None:
+        # contiguous-partition default: real rows per shard = what remains of
+        # n_total past the shard's offset, clipped to the slot capacity
+        g = indices[0].graph if isinstance(indices[0], EMQGIndex) else indices[0]
+        per = int(g.vectors.shape[0])
+        sizes = jnp.clip(n_total - offsets, 0, per)
     return ShardedIndex(index=stacked,
-                        offsets=jnp.asarray(offsets, jnp.int32),
-                        n_total=n_total)
+                        offsets=offsets,
+                        n_total=n_total,
+                        sizes=jnp.asarray(sizes, jnp.int32))
+
+
+def shard_rows(vectors: np.ndarray, shard: int, per: int) -> tuple[np.ndarray, int]:
+    """Rows of contiguous shard ``shard`` (capacity ``per``), padded to
+    ``per`` by wrapping the shard's first row (or global row 0 when the shard
+    is past the end of the data).  Returns ``(rows, n_real)``.
+
+    This is the canonical shard input: ``build_sharded`` and the repair
+    path's from-source rebuild both call it, so a repaired shard is built
+    from bit-identical input."""
+    vectors = np.asarray(vectors, np.float32)
+    rows = vectors[shard * per : (shard + 1) * per]
+    n_real = int(rows.shape[0])
+    if n_real < per:  # pad by wrapping
+        pad = np.tile(rows[:1] if rows.size else vectors[:1],
+                      (per - n_real, 1))
+        rows = np.concatenate([rows, pad]) if rows.size else pad
+    return rows, n_real
+
+
+def build_shard(rows: np.ndarray, shard: int,
+                params: Optional[BuildParams] = None,
+                quantized: bool = False, seed: int = 0):
+    """Build one shard's index exactly as ``build_sharded`` would (per-shard
+    seed derivation ``seed + shard``) — shared with ``core.repair`` so a
+    rebuilt shard is bit-identical to the original."""
+    p = dataclasses.replace(params or BuildParams(), seed=seed + shard)
+    if quantized:
+        return build_emqg(rows, p)
+    return build_approx(rows, p)
 
 
 def build_sharded(vectors, n_shards: int, params: Optional[BuildParams] = None,
@@ -109,22 +154,13 @@ def build_sharded(vectors, n_shards: int, params: Optional[BuildParams] = None,
     vectors = np.asarray(vectors, np.float32)
     n = vectors.shape[0]
     per = int(np.ceil(n / n_shards))
-    shards, offsets = [], []
+    shards, offsets, sizes = [], [], []
     for s in range(n_shards):
-        lo = s * per
-        rows = vectors[lo : lo + per]
-        if rows.shape[0] < per:  # pad by wrapping
-            pad = np.tile(rows[:1] if rows.size else vectors[:1],
-                          (per - rows.shape[0], 1))
-            rows = np.concatenate([rows, pad]) if rows.size else pad
-        p = params or BuildParams()
-        p = dataclasses.replace(p, seed=seed + s)
-        if quantized:
-            shards.append(build_emqg(rows, p))
-        else:
-            shards.append(build_approx(rows, p))
-        offsets.append(lo)
-    return stack_indices(shards, offsets, n)
+        rows, n_real = shard_rows(vectors, s, per)
+        shards.append(build_shard(rows, s, params, quantized, seed))
+        offsets.append(s * per)
+        sizes.append(n_real)
+    return stack_indices(shards, offsets, n, sizes=sizes)
 
 
 def _local_search(index, queries, params: SearchParams, quantized: bool):
@@ -190,8 +226,14 @@ def make_sharded_search(mesh, shard_axes=("data",), query_axis=None,
         # mask dead shards *before* the merge: their candidates become
         # (id=-1, dist=inf) and can never displace a live shard's entry —
         # both merge strategies then exclude them for free
-        alive = valid[0]
-        gids = jnp.where(alive & (res.ids >= 0), res.ids + offset, -1)
+        keep = valid[0] & (res.ids >= 0)
+        if sidx.sizes is not None:
+            # pad rows (local id >= sizes) are wrapped copies of the shard's
+            # first row, whose real copy competes in the same local top-k —
+            # mask them like dead-shard entries so no id >= n_total leaks
+            # and no id appears twice in the merged top-k
+            keep = keep & (res.ids < sidx.sizes[0])
+        gids = jnp.where(keep, res.ids + offset, -1)
         d = jnp.where(gids >= 0, res.dists, jnp.inf)
         if merge == "ring":
             mi, md = _merge_ring(gids, d, params.k, axis_name, n_shards)
@@ -204,7 +246,9 @@ def make_sharded_search(mesh, shard_axes=("data",), query_axis=None,
             valid = jnp.ones((n_shards,), bool)
         index_specs = jax.tree.map(lambda _: P(shard_axes), sidx.index)
         in_specs = (
-            ShardedIndex(index=index_specs, offsets=P(shard_axes), n_total=sidx.n_total),
+            ShardedIndex(index=index_specs, offsets=P(shard_axes),
+                         n_total=sidx.n_total,
+                         sizes=None if sidx.sizes is None else P(shard_axes)),
             q_spec,
             P(shard_axes),
         )
@@ -235,7 +279,9 @@ def build_replicated(vectors, n_shards: int, n_replicas: int = 2,
     index = jax.tree.map(lambda x: jnp.repeat(x, n_replicas, axis=0),
                          base.index)
     offsets = jnp.repeat(base.offsets, n_replicas)
-    return ShardedIndex(index=index, offsets=offsets, n_total=base.n_total)
+    sizes = None if base.sizes is None else jnp.repeat(base.sizes, n_replicas)
+    return ShardedIndex(index=index, offsets=offsets, n_total=base.n_total,
+                        sizes=sizes)
 
 
 class ShardHealthRegistry:
@@ -330,11 +376,16 @@ class DeadlineHealthChecker:
     and ``check(now=...)`` are injectable, so a fault schedule can age
     heartbeats without sleeping.
 
-    With ``metrics``, every check refreshes ``shard_heartbeat_age_seconds
-    {shard}`` gauges (age of the *freshest* live replica — the quantity the
-    deadline compares against, per replica), bumps
-    ``shard_marked_dead_total`` per kill, emits a ``shard_deadline_expired``
-    structured event, and republishes the liveness gauges.
+    With ``metrics``, every check refreshes two gauge families:
+    ``shard_replica_heartbeat_age_seconds{shard,replica}`` — the raw
+    heartbeat age of every slot, live or dead (what the deadline is compared
+    against, per replica) — and the per-shard rollup
+    ``shard_heartbeat_age_seconds{shard}``, which is the **min** age over the
+    shard's *live* replicas (the freshest live replica; ``inf`` when every
+    replica is dead — the shard-level "how stale is the healthiest copy"
+    signal).  It also bumps ``shard_marked_dead_total`` per kill, emits a
+    ``shard_deadline_expired`` structured event, and republishes the
+    liveness gauges.
     """
 
     def __init__(self, registry: ShardHealthRegistry, deadline_s: float,
@@ -355,9 +406,13 @@ class DeadlineHealthChecker:
         killed: list[tuple[int, int]] = []
         for s in range(reg.n_shards):
             for r in range(reg.n_replicas):
+                age = reg.heartbeat_age(s, r, now=now)
+                if self.metrics is not None:
+                    self.metrics.gauge(
+                        "shard_replica_heartbeat_age_seconds",
+                        {"shard": s, "replica": r}).set(age)
                 if not reg._live[s, r]:
                     continue
-                age = reg.heartbeat_age(s, r, now=now)
                 if age > self.deadline_s:
                     reg.mark_dead(s, r)
                     killed.append((s, r))
@@ -418,8 +473,12 @@ class FaultTolerantShardedSearch:
         self._run = make_sharded_search(mesh, shard_axes=shard_axes,
                                         query_axis=query_axis, merge=merge,
                                         quantized=quantized)
-        offs = np.asarray(sidx.offsets)[::n_replicas]
-        self.shard_sizes = np.diff(np.append(offs, sidx.n_total)).astype(int)
+        if sidx.sizes is not None:
+            self.shard_sizes = np.asarray(sidx.sizes)[::n_replicas].astype(int)
+        else:
+            offs = np.asarray(sidx.offsets)[::n_replicas]
+            self.shard_sizes = np.diff(
+                np.append(offs, sidx.n_total)).astype(int)
 
     def __call__(self, queries, params: SearchParams) -> ShardedSearchResult:
         mask = self.registry.participation()
@@ -452,8 +511,11 @@ def host_reference_merge(sidx: ShardedIndex, registry: ShardHealthRegistry,
         res = _local_search(local, queries, params, quantized)
         ids = np.asarray(res.ids)
         offs = int(np.asarray(sidx.offsets)[slot])
-        all_i.append(np.where(ids >= 0, ids + offs, -1))
-        all_d.append(np.where(ids >= 0, np.asarray(res.dists), np.inf))
+        keep = ids >= 0
+        if sidx.sizes is not None:
+            keep &= ids < int(np.asarray(sidx.sizes)[slot])
+        all_i.append(np.where(keep, ids + offs, -1))
+        all_d.append(np.where(keep, np.asarray(res.dists), np.inf))
     cat_i = np.concatenate(all_i, axis=1)
     cat_d = np.concatenate(all_d, axis=1)
     order = np.argsort(cat_d, axis=1, kind="stable")[:, : params.k]

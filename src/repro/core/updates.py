@@ -278,10 +278,14 @@ def _atomic_write(path: str, data: bytes,
 def wal_append(wal_dir: str, seq: int, op: str,
                payload: dict[str, np.ndarray],
                fault_hook: Optional[Callable[[str], None]] = None,
-               metrics=None) -> str:
+               metrics=None, compress: bool = False) -> str:
     """Append one committed record.  Payload npz lands first, the manifest
     (whose existence *is* the commit) second — a crash between the two
     (the ``torn_journal`` fault point) leaves an uncommitted torn record.
+
+    ``compress`` writes the payload with ``np.savez_compressed`` — the
+    manifest checksums the *arrays*, not the file, so compressed and plain
+    records verify and replay identically (``wal_read`` is format-blind).
 
     ``metrics`` (an ``obs.MetricsRegistry``) times the whole append into
     ``wal_append_seconds``, each fsync into ``wal_fsync_seconds``, and
@@ -293,7 +297,7 @@ def wal_append(wal_dir: str, seq: int, op: str,
     base = os.path.join(wal_dir, f"wal_{seq:09d}")
     import io
     buf = io.BytesIO()
-    np.savez(buf, **payload)
+    (np.savez_compressed if compress else np.savez)(buf, **payload)
     _atomic_write(base + ".npz", buf.getvalue(), fsync_hist=fsync_hist)
     if fault_hook is not None:
         fault_hook("torn_journal")
@@ -349,6 +353,18 @@ def wal_seqs(wal_dir: str) -> list[int]:
                   for m in map(_WAL_RE.match, os.listdir(wal_dir)) if m)
 
 
+def _record_bytes(wal_dir: str, seq: int) -> int:
+    """On-disk footprint of one record (payload + manifest; 0 if absent)."""
+    base = os.path.join(wal_dir, f"wal_{seq:09d}")
+    total = 0
+    for suffix in (".npz", ".json"):
+        try:
+            total += os.path.getsize(base + suffix)
+        except OSError:
+            pass
+    return total
+
+
 def _truncate_wal(wal_dir: str, upto_seq: int) -> None:
     for s in wal_seqs(wal_dir):
         if s <= upto_seq:
@@ -392,11 +408,22 @@ class JournaledLiveIndex:
     this threshold, a ``consolidate`` is triggered automatically — and
     journaled as its own record, so replay re-runs it at the same position
     in the op stream.
+
+    ``checkpoint_every_bytes``: when the WAL grows past this many bytes
+    since the last checkpoint (measured as on-disk record footprint — the
+    quantity that actually bounds recovery replay I/O, unlike an op count,
+    which a single large insert batch defeats), a checkpoint is taken
+    automatically right after the mutation commits.  ``compress`` writes
+    WAL payloads with ``np.savez_compressed``; both knobs are persisted in
+    ``meta.json`` so ``recover()`` restores them (and the byte accumulator)
+    and stays bit-identical either way.
     """
 
     def __init__(self, live: LiveIndex, directory: str, *,
                  seq: int = 0, consolidate_frac: float = 0.3,
                  keep_checkpoints: int = 3,
+                 checkpoint_every_bytes: Optional[int] = None,
+                 compress: bool = False,
                  fault_hook: Optional[Callable[[str], None]] = None,
                  metrics=None):
         self.live = live
@@ -404,6 +431,8 @@ class JournaledLiveIndex:
         self.seq = seq
         self.consolidate_frac = consolidate_frac
         self.keep_checkpoints = keep_checkpoints
+        self.checkpoint_every_bytes = checkpoint_every_bytes
+        self.compress = compress
         self.fault_hook = fault_hook
         # obs.MetricsRegistry (or None): WAL append/fsync + checkpoint
         # save/restore timings, wal_records_total{op} — purely additive,
@@ -411,6 +440,7 @@ class JournaledLiveIndex:
         self.metrics = metrics
         self.wal_dir = os.path.join(directory, "wal")
         self.ckpt_dir = os.path.join(directory, "ckpt")
+        self._wal_bytes = 0     # on-disk record bytes since last checkpoint
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -424,6 +454,8 @@ class JournaledLiveIndex:
             "delta": live.graph.delta,
             "params": dataclasses.asdict(live.params),
             "consolidate_frac": self.consolidate_frac,
+            "checkpoint_every_bytes": self.checkpoint_every_bytes,
+            "compress": self.compress,
         }
         _atomic_write(os.path.join(directory, "meta.json"),
                       json.dumps(meta).encode())
@@ -454,6 +486,7 @@ class JournaledLiveIndex:
         steps = list_steps(self.ckpt_dir)
         if steps:
             _truncate_wal(self.wal_dir, min(steps))
+        self._wal_bytes = 0
         return path
 
     # -- mutations (journal first, splice second) ----------------------------
@@ -464,11 +497,22 @@ class JournaledLiveIndex:
     def _mutate(self, op: str, payload: dict[str, np.ndarray]) -> None:
         self._fault("before_journal")
         wal_append(self.wal_dir, self.seq + 1, op, payload,
-                   fault_hook=self.fault_hook, metrics=self.metrics)
+                   fault_hook=self.fault_hook, metrics=self.metrics,
+                   compress=self.compress)
         self._fault("after_journal")
         self.live = _apply_op(self.live, op, payload,
                               fault_hook=self.fault_hook)
         self.seq += 1
+        self._wal_bytes += _record_bytes(self.wal_dir, self.seq)
+        if self.metrics is not None:
+            self.metrics.gauge("wal_bytes_since_checkpoint").set(
+                self._wal_bytes)
+        if (self.checkpoint_every_bytes is not None
+                and self._wal_bytes >= self.checkpoint_every_bytes):
+            if self.metrics is not None:
+                self.metrics.counter("wal_auto_checkpoint_total").inc()
+                self.metrics.gauge("wal_bytes_since_checkpoint").set(0)
+            self.checkpoint()
 
     def insert(self, vectors) -> None:
         self._mutate("insert",
@@ -547,5 +591,11 @@ def recover(directory: str, metrics=None) -> tuple[JournaledLiveIndex, dict]:
             info["elapsed_s"])
     journal = JournaledLiveIndex(
         live, directory, seq=seq,
-        consolidate_frac=meta.get("consolidate_frac", 0.3), metrics=metrics)
+        consolidate_frac=meta.get("consolidate_frac", 0.3),
+        checkpoint_every_bytes=meta.get("checkpoint_every_bytes"),
+        compress=meta.get("compress", False), metrics=metrics)
+    # resume the byte accumulator: committed records newer than the restored
+    # checkpoint are exactly what the next auto-checkpoint threshold is over
+    journal._wal_bytes = sum(_record_bytes(wal_dir, s)
+                             for s in range(step + 1, seq + 1))
     return journal, info

@@ -20,6 +20,13 @@ snapshot on stdout.  ``--metrics-every S`` additionally prints a one-line
 stderr summary at most every S seconds while draining (implies
 ``--metrics``).
 
+``--shards N`` serves a sharded index over N devices through
+``ShardedResilientAnnServer``; ``--kill-shards 1,2`` stages a mid-stream
+shard loss and ``--auto-repair`` (with ``--repair-budget`` /
+``--store-dir``) lets the ``core.repair`` controller rebuild the lost
+shards from a durable vector store, verify, and atomically re-install them
+— the printed coverage trajectory returns to 1.0 without operator action.
+
 At production scale the same loop drives ``core.distributed``'s sharded
 index across the mesh (see examples/vector_serve.py for the multi-shard
 CPU demonstration)."""
@@ -80,13 +87,34 @@ def main(argv=None) -> int:
     ap.add_argument("--metrics-every", type=float, default=0.0,
                     help="emit a one-line stderr metrics summary at most "
                          "every S seconds while serving (implies --metrics)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="serve a sharded δ-EMQG over N devices (0 = "
+                         "single-node).  Needs N visible devices — on CPU "
+                         "set XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N")
+    ap.add_argument("--kill-shards", default="",
+                    help="comma-separated shard ids killed after the first "
+                         "third of the stream (sharded-mode chaos demo)")
+    ap.add_argument("--auto-repair", action="store_true",
+                    help="self-heal killed shards: rebuild from a durable "
+                         "ShardVectorStore, verify, atomically install "
+                         "(sharded mode)")
+    ap.add_argument("--repair-budget", type=int, default=1,
+                    help="max repair attempts per sweep (--auto-repair)")
+    ap.add_argument("--store-dir", default=None,
+                    help="ShardVectorStore directory (--auto-repair; "
+                         "default: a temp dir created for the run)")
     args = ap.parse_args(argv)
 
     registry = tracer = summary = None
     if args.metrics or args.metrics_every > 0:
-        registry = declare_serve_metrics(MetricsRegistry())
+        registry = declare_serve_metrics(MetricsRegistry(),
+                                         n_shards=max(args.shards, 1))
         tracer = Tracer()
         summary = PeriodicSummary(registry, args.metrics_every)
+
+    if args.shards:
+        return _serve_sharded(args, registry, tracer)
 
     print(f"[serve] building δ-EMQG over n={args.n} d={args.dim} …")
     base = clustered_vectors(args.n, args.dim, 48, seed=0)
@@ -166,6 +194,95 @@ def main(argv=None) -> int:
           f"{srv.stats.n_batches} batches; recall@{args.k}={rec:.4f}; "
           f"QPS={srv.stats.qps:.1f} (CPU proxy); "
           f"p_max_latency={srv.stats.max_latency_s * 1e3:.1f} ms")
+    _dump_metrics(registry, tracer)
+    return 0
+
+
+def _serve_sharded(args, registry, tracer) -> int:
+    """Sharded serving with optional mid-stream shard kills and self-healing
+    repair — the CLI face of ``core.repair`` + ``ShardedResilientAnnServer``.
+
+    The stream runs in three stages: healthy third, then ``--kill-shards``
+    lands, then the tail — with ``--auto-repair`` the repair controller
+    rebuilds the killed shards from the vector store before the next batch
+    dispatches, so the printed coverage trajectory returns to 1.0 without
+    an operator call."""
+    import tempfile
+
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.core.distributed import build_sharded
+    from repro.serve import ShardedResilientAnnServer
+
+    devs = jax.devices()
+    if len(devs) < args.shards:
+        print(f"[serve] need {args.shards} devices, have {len(devs)} — "
+              "on CPU set XLA_FLAGS=--xla_force_host_platform_device_count="
+              f"{args.shards}")
+        return 2
+    mesh = Mesh(np.array(devs[: args.shards]), ("data",))
+    bp = BuildParams(max_degree=args.max_degree, beam_width=args.beam,
+                     delta=args.delta, t=args.beam // 2, iters=2, block=1024,
+                     align_degree=True)
+    print(f"[serve] building sharded δ-EMQG: n={args.n} d={args.dim} "
+          f"S={args.shards} …")
+    base = clustered_vectors(args.n, args.dim, 48, seed=0)
+    t0 = time.perf_counter()
+    sidx = build_sharded(base, args.shards, bp, quantized=True, seed=0)
+    print(f"[serve] built in {time.perf_counter() - t0:.1f}s")
+
+    store_dir = None
+    if args.auto_repair:
+        from repro.core.repair import ShardVectorStore
+        store_dir = args.store_dir or tempfile.mkdtemp(prefix="shard_store_")
+        ShardVectorStore.create(store_dir, base, args.shards, bp,
+                                quantized=True, seed=0)
+        print(f"[serve] vector store at {store_dir}")
+
+    queries = clustered_vectors(args.queries, args.dim, 48, seed=1)
+    gt_d, gt_i = brute_force_knn(queries, base, args.k)
+    params = SearchParams(k=args.k, l0=args.k, l_max=256, alpha=args.alpha,
+                          adaptive=True, max_hops=2048)
+    repair_cfg = None
+    if args.auto_repair:
+        from repro.core.repair import RepairConfig
+        repair_cfg = RepairConfig(budget_per_sweep=args.repair_budget)
+    srv = ShardedResilientAnnServer(
+        sidx, params, mesh, quantized=True, max_batch=128,
+        buckets=(32, 128), metrics=registry, tracer=tracer,
+        auto_repair=repair_cfg, vector_store=store_dir)
+
+    kill = [int(x) for x in args.kill_shards.split(",") if x.strip()]
+    stages = np.array_split(np.arange(len(queries)), 3)
+    responses, coverage_traj = [], []
+    for stage, idxs in enumerate(stages):
+        if stage == 1 and kill:
+            for s in kill:
+                srv.kill_shard(s)
+            print(f"[serve] killed shards {kill} "
+                  f"(coverage now {srv.coverage:.2f})")
+        if idxs.size:
+            srv.submit_many(queries[idxs])
+            responses.extend(srv.drain())
+        coverage_traj.append(srv.coverage)
+    served = [(i, r) for i, r in enumerate(responses) if r.ok]
+    rec = np.mean([
+        len(set(r.ids.tolist()) & set(gt_i[i].tolist())) / args.k
+        for i, r in served]) if served else 0.0
+    worst_cov = min((r.coverage for _, r in served), default=1.0)
+    print(f"[serve] {len(served)} served / {len(responses)} submitted; "
+          f"recall@{args.k}={rec:.4f}; coverage trajectory "
+          f"{[round(c, 2) for c in coverage_traj]} (worst response "
+          f"{worst_cov:.2f})")
+    if srv.repair is not None:
+        print(f"[serve] repair: {srv.repair.n_repaired} repaired, "
+              f"{srv.repair.n_failed} failed attempts, "
+              f"{srv.repair.n_sweeps} sweeps; final coverage "
+              f"{srv.coverage:.2f}")
+    elif kill:
+        print(f"[serve] no auto-repair: coverage stays {srv.coverage:.2f} "
+              "until an operator rebuilds")
     _dump_metrics(registry, tracer)
     return 0
 

@@ -573,7 +573,8 @@ def abstract_sharded_emqg(n_total: int, dim: int, M: int, n_shards: int
         center=sds((n_shards, dim), jnp.float32),
         dim=dim)
     return ShardedIndex(index=EMQGIndex(graph=graph, codes=codes),
-                        offsets=sds((n_shards,), jnp.int32), n_total=n_total)
+                        offsets=sds((n_shards,), jnp.int32), n_total=n_total,
+                        sizes=sds((n_shards,), jnp.int32))
 
 
 def _ann_serve_cell(arch: ArchSpec, shape: ShapeSpec, mesh) -> Cell:

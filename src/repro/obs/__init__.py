@@ -30,8 +30,15 @@ search_final_l                          histogram  per-query final beam length
 shard_live{shard}                       gauge      1 = some replica live
 shard_coverage                          gauge      live logical shards / S
 shard_failover                          gauge      shards served by non-primary
-shard_heartbeat_age_seconds{shard}      gauge      age at last health check
+shard_heartbeat_age_seconds{shard}      gauge      min age over live replicas
+shard_replica_heartbeat_age_seconds
+  {shard,replica}                       gauge      raw per-slot heartbeat age
 shard_marked_dead_total                 counter    health-checker kills
+repair_started_total                    counter    repair attempts begun
+repair_succeeded_total                  counter    verified installs completed
+repair_failed_total                     counter    contained repair failures
+shard_under_repair{shard}               gauge      1 from first attempt→success
+repair_duration_seconds                 histogram  successful repair wall time
 wal_append_seconds                      histogram  journal record commit
 wal_fsync_seconds                       histogram  fsync inside atomic writes
 wal_records_total{op}                   counter    committed journal records
@@ -109,6 +116,14 @@ def declare_serve_metrics(registry: MetricsRegistry,
                        help="1 if some replica of the shard is live").set(1.0)
     registry.counter("shard_marked_dead_total",
                      help="shards auto-killed by the health checker")
+    registry.counter("repair_started_total",
+                     help="shard repair attempts begun")
+    registry.counter("repair_succeeded_total",
+                     help="shard repairs verified and installed")
+    registry.counter("repair_failed_total",
+                     help="shard repair attempts that failed (will retry)")
+    registry.histogram("repair_duration_seconds",
+                       help="wall time of successful shard repairs")
     registry.histogram("wal_append_seconds",
                        help="WAL record commit (payload+manifest)")
     registry.histogram("wal_fsync_seconds",

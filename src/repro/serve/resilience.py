@@ -533,6 +533,14 @@ class ShardedResilientAnnServer(ResilientAnnServer):
     ``kill_shard`` / ``revive_shard`` are the operator surface (a health
     checker would drive them); with ``n_replicas > 1`` a killed primary
     fails over to its replica before coverage degrades at all.
+
+    **Self-healing** (``auto_repair=``): with a durable ``vector_store``
+    (a ``core.repair.ShardVectorStore`` or its directory path), a
+    ``RepairController`` is swept once per dispatch — after the health
+    check kills stale replicas, before the batch routes — so a dead slot
+    is rebuilt from source, verified, atomically installed, and
+    ``mark_live``-d without any operator call.  Pass ``True`` for the
+    default ``RepairConfig`` or a ``RepairConfig`` to tune budget/backoff.
     """
 
     def __init__(self, sidx, params: SearchParams, mesh, *,
@@ -540,7 +548,9 @@ class ShardedResilientAnnServer(ResilientAnnServer):
                  merge: str = "all_gather", quantized: bool = False,
                  n_replicas: int = 1,
                  config: ResilienceConfig = ResilienceConfig(),
-                 clock=time.monotonic, health_deadline_s=None, **kw):
+                 clock=time.monotonic, health_deadline_s=None,
+                 auto_repair=None, vector_store=None,
+                 repair_fault_hook=None, **kw):
         from repro.core.distributed import (DeadlineHealthChecker,
                                             FaultTolerantShardedSearch,
                                             ShardHealthRegistry)
@@ -570,6 +580,30 @@ class ShardedResilientAnnServer(ResilientAnnServer):
             [("sharded", m) for m in merges],
             threshold=config.breaker_threshold,
             cooldown_s=config.breaker_cooldown_s, clock=clock)
+        self.repair = None
+        if auto_repair:
+            from repro.core.repair import (RepairConfig, RepairController,
+                                           ShardVectorStore)
+            if vector_store is None:
+                raise ValueError("auto_repair requires vector_store (a "
+                                 "ShardVectorStore or its directory path)")
+            if isinstance(vector_store, str):
+                vector_store = ShardVectorStore(vector_store)
+            self.repair = RepairController(
+                vector_store, self.registry,
+                get_sidx=lambda: self.index,
+                set_sidx=self._install_sidx,
+                config=auto_repair if isinstance(auto_repair, RepairConfig)
+                else None,
+                clock=clock, metrics=self.metrics,
+                fault_hook=repair_fault_hook)
+
+    def _install_sidx(self, sidx) -> None:
+        """Atomic index swap: the new pytree replaces the old for every
+        searcher at once (the next batch sees one consistent index)."""
+        self.index = sidx
+        for ft in self._ft.values():
+            ft.sidx = sidx
 
     # -- operator surface ----------------------------------------------------
     def kill_shard(self, shard: int, replica: int = 0) -> None:
@@ -598,6 +632,8 @@ class ShardedResilientAnnServer(ResilientAnnServer):
         merge = backend if backend in self._ft else next(iter(self._ft))
         if self.health_checker is not None:
             self.health_checker.check()     # stale heartbeats → mark_dead
+        if self.repair is not None:
+            self.repair.sweep()             # dead slots → rebuild + install
         tr = self.tracer
         if tr is not None:
             # fan-out spans: one child per logical shard under a fanout

@@ -2,8 +2,11 @@ from .oracle import check_delta_bound, exact_knn, recall_at_k  # noqa: F401
 from .faults import (  # noqa: F401
     FaultPlan,
     KernelFault,
+    RepairFault,
+    RepairFaultPlan,
     ShardDeathPlan,
     SimulatedCrash,
+    corrupt_shard_source,
     crash_at,
     flip_bits,
     inject_search_faults,

@@ -27,6 +27,12 @@ deterministic and seedable so CI reproduces exactly:
 * **Shard death** — ``ShardDeathPlan`` drives a
   ``ShardHealthRegistry`` from a call schedule (kill shard s before call i,
   revive at call j) so coverage-degradation sequences replay exactly.
+* **Repair faults** — ``RepairFaultPlan`` builds the ``fault_hook`` a
+  ``core.repair.RepairController`` accepts: ``RepairFault`` on rebuild
+  visits (contained → backoff + retry) and ``SimulatedCrash`` at an
+  install-phase point (uncontained → proves the atomic-install rule).
+  ``corrupt_shard_source`` tampers a ``ShardVectorStore`` shard post-hoc
+  so the CRC verify-on-read path is exercised.
 
 Nothing here is imported by production code paths — faults flow only
 test → harness → server seam.
@@ -327,3 +333,91 @@ class inject_shard_deaths:
     def __exit__(self, *exc):
         self.server._search = self._orig
         return False
+
+
+# ---------------------------------------------------------------------------
+# Shard repair faults (core.repair).
+# ---------------------------------------------------------------------------
+
+
+class RepairFault(RuntimeError):
+    """Injected failure inside the repair controller's contained phase."""
+
+
+_REPAIR_CONTAINED = ("load_source", "rebuild")
+_REPAIR_CRASH_POINTS = ("before_install", "mid_install", "after_install")
+
+
+@dataclasses.dataclass
+class RepairFaultPlan:
+    """Deterministic schedule for a ``RepairController``'s ``fault_hook``.
+
+    Two distinct failure classes, matching the controller's two phases:
+
+    * **contained failures** — ``fail_rebuilds`` raises ``RepairFault`` on
+      the first N visits to the ``rebuild`` point (``fail_rebuild_visits``
+      adds specific 0-based visit indices); the controller must catch
+      these, back off, and retry — coverage stays down but never regresses.
+    * **install crashes** — ``crash_point`` (one of ``before_install`` /
+      ``mid_install`` / ``after_install``) raises ``SimulatedCrash`` on its
+      ``crash_on_visit``-th visit.  These model the process dying in the
+      UNcontained phase: the exception propagates out of ``sweep`` and the
+      test asserts the atomic-install rule — the participation mask never
+      flips for a repair whose install did not complete.  Crash points in
+      the contained phase are rejected (``ValueError``): the controller
+      would swallow them as an ordinary repair failure, silently testing
+      nothing.
+
+    ``hook()`` builds the actual ``fault_hook`` and tracks per-point visit
+    counts in ``visits`` for assertions.
+    """
+
+    fail_rebuilds: int = 0
+    fail_rebuild_visits: tuple[int, ...] = ()
+    crash_point: Optional[str] = None
+    crash_on_visit: int = 0
+
+    def __post_init__(self):
+        if (self.crash_point is not None
+                and self.crash_point not in _REPAIR_CRASH_POINTS):
+            raise ValueError(
+                f"crash_point must be one of {_REPAIR_CRASH_POINTS} (the "
+                f"uncontained install phase), got {self.crash_point!r}")
+
+    def hook(self):
+        visits: dict[str, int] = {}
+
+        def fault_hook(point: str) -> None:
+            v = visits.get(point, 0)
+            visits[point] = v + 1
+            if point == "rebuild" and (v < self.fail_rebuilds
+                                       or v in self.fail_rebuild_visits):
+                raise RepairFault(f"injected rebuild failure (visit {v})")
+            if point == self.crash_point and v == self.crash_on_visit:
+                raise SimulatedCrash(f"crash at {point} (visit {v})")
+
+        fault_hook.visits = visits
+        return fault_hook
+
+
+def corrupt_shard_source(store_dir: str, shard: int,
+                         mode: str = "checksum") -> None:
+    """Corrupt one shard's durable vector source post-hoc (same shapes as
+    ``torn_wal_record``): ``"truncate"`` halves the npz, ``"checksum"``
+    perturbs one element while the manifest keeps the stale CRC.  Either
+    way ``ShardVectorStore.load_shard`` must raise
+    ``ShardSourceCorruptError`` and the repair must fail *cleanly* — no
+    install, no mark_live, wrong data never serves."""
+    npz = os.path.join(store_dir, f"shard_{shard:04d}.npz")
+    if mode == "truncate":
+        with open(npz, "rb") as f:
+            data = f.read()
+        with open(npz, "wb") as f:
+            f.write(data[: max(1, len(data) // 2)])
+    elif mode == "checksum":
+        with np.load(npz) as z:
+            flat = {k: z[k].copy() for k in z.files}
+        flat["rows"].flat[0] += 1.0
+        np.savez(npz, **flat)
+    else:
+        raise ValueError(f"unknown mode: {mode!r}")

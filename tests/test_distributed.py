@@ -95,6 +95,47 @@ print("OK")
     assert "OK" in out
 
 
+def test_pad_rows_never_leak_global_ids():
+    """Regression: the last shard's pad rows (wrapped copies of its first
+    row) used to get global ids ``lo+j >= n_total``.  With the query sitting
+    exactly ON the pad-source row the pads tie it at distance 0, so pre-fix
+    they reached the merged top-k.  Both device merges and the host
+    reference must now mask pads out like dead-shard entries: every
+    returned id is in [0, n_total), valid ids are unique per row, and the
+    pad-source row itself (whose real copy competes in the same local
+    top-k) is still returned."""
+    out = _run("""
+from repro.core import BuildParams, SearchParams
+from repro.core.distributed import (build_sharded, make_sharded_search,
+                                    host_reference_merge, ShardHealthRegistry)
+rng = np.random.default_rng(5)
+X = rng.normal(size=(509, 16)).astype(np.float32)   # 4 shards of 128: 3 pads
+sidx = build_sharded(X, 4, BuildParams(max_degree=12, beam_width=24, t=8,
+                                       iters=1, block=512))
+assert np.asarray(sidx.sizes).tolist() == [128, 128, 128, 125]
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+params = SearchParams(k=8, l0=16, l_max=32, adaptive=False, max_hops=256)
+# queries ON and near the pad-source row (global id 384 = last shard row 0)
+Q = np.concatenate([X[384:385], X[384:385] + 0.01 * rng.normal(size=(3, 16)).astype(np.float32)])
+def check(ids):
+    ids = np.asarray(ids)
+    assert ids.max() < sidx.n_total, ids.max()
+    for row in ids:
+        valid = row[row >= 0]
+        assert len(set(valid.tolist())) == len(valid), row
+    assert (ids[0] == 384).any()      # the source row itself is returned
+for merge in ("all_gather", "ring"):
+    run = make_sharded_search(mesh, shard_axes=("data",), merge=merge)
+    ids, dists = run(sidx, jnp.asarray(Q), params)
+    check(ids)
+ref_i, _ = host_reference_merge(sidx, ShardHealthRegistry(4), jnp.asarray(Q),
+                                params)
+check(ref_i)
+print("OK")
+""")
+    assert "OK" in out
+
+
 def test_query_axis_sharding():
     out = _run("""
 from repro.core import BuildParams, SearchParams
@@ -296,9 +337,17 @@ def test_deadline_checker_kills_stale_replica_only():
     snap = snapshot(m)
     assert snap["counters"]["shard_marked_dead_total"] == 1
     assert snap["gauges"]['shard_live{shard="1"}'] == 1.0
-    # gauge tracks the freshest LIVE replica's age
+    # per-shard rollup gauge tracks the freshest LIVE replica's age …
     assert abs(snap["gauges"]['shard_heartbeat_age_seconds{shard="1"}']
                - 4.0) < 1e-9
+    # … while the per-replica family reports every slot's raw age (the
+    # stale replica's 7.0 is visible even though the rollup hides it)
+    assert abs(snap["gauges"][
+        'shard_replica_heartbeat_age_seconds{replica="1",shard="1"}']
+        - 7.0) < 1e-9
+    assert abs(snap["gauges"][
+        'shard_replica_heartbeat_age_seconds{replica="0",shard="1"}']
+        - 4.0) < 1e-9
     evts = [e for e in snap["events"] if e["name"] == "shard_deadline_expired"]
     assert len(evts) == 1
     assert evts[0]["shard"] == 1 and evts[0]["replica"] == 1

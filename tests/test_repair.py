@@ -1,0 +1,462 @@
+"""Self-healing shard repair: detect → rebuild → verify → atomic install.
+
+The ISSUE-level acceptance claims pinned here:
+
+* after N injected shard deaths with auto-repair enabled,
+  ``ShardHealthRegistry.coverage()`` returns to 1.0 without any operator
+  ``mark_live``/``revive_shard`` call;
+* a crash mid-install never flips the participation mask;
+* the repaired shard is **bit-identical** to a from-scratch rebuild (and
+  to the slot the original ``build_sharded`` produced, because the store
+  snapshots the exact padded rows and ``build_shard`` derives the same
+  per-shard seed).
+
+The controller tests run in-process (the controller, store, registry and
+``host_reference_merge`` are all host-side; single default device is
+fine).  The end-to-end chaos test spawns a 4-device subprocess like
+``test_distributed.py``.  Everything rides the ``faults`` CI matrix.
+"""
+
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core import BuildParams, SearchParams  # noqa: E402
+from repro.core.distributed import (  # noqa: E402
+    ShardHealthRegistry,
+    build_replicated,
+    build_shard,
+    build_sharded,
+)
+from repro.core.repair import (  # noqa: E402
+    RepairConfig,
+    RepairController,
+    ShardVectorStore,
+)
+from repro.obs import MetricsRegistry, snapshot  # noqa: E402
+from repro.testing import (  # noqa: E402
+    RepairFaultPlan,
+    SimulatedCrash,
+    corrupt_shard_source,
+)
+
+pytestmark = pytest.mark.faults
+
+# Build params chosen so that every rebuilt shard passes the audit gate
+# cleanly on the fixture corpus (weaker builds — fewer iters, lower degree
+# — legitimately leave unreachable nodes, which the gate MUST reject; see
+# test_audit_gate_rejects_defective_rebuild).
+BP = BuildParams(max_degree=12, beam_width=24, t=10, iters=3, block=128,
+                 delta=0.5)
+N, DIM, S, SEED = 509, 12, 4, 3
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return np.random.default_rng(0).standard_normal((N, DIM)).astype(
+        np.float32)
+
+
+@pytest.fixture(scope="module")
+def built(corpus):
+    return build_sharded(corpus, S, BP, seed=SEED)
+
+
+@pytest.fixture(scope="module")
+def store(corpus, tmp_path_factory):
+    d = tmp_path_factory.mktemp("shard_store")
+    return ShardVectorStore.create(str(d), corpus, S, params=BP, seed=SEED)
+
+
+def _controller(store, sidx, registry=None, **kw):
+    """(controller, registry, holder, clock) over a mutable index holder.
+
+    ``install_slot`` is purely functional, so the module-scoped ``built``
+    index is never mutated — each test gets its own holder/registry."""
+    t = {"now": 0.0}
+    reg = registry or ShardHealthRegistry(S, clock=lambda: t["now"])
+    holder = {"sidx": sidx}
+    ctl = RepairController(store, reg,
+                           get_sidx=lambda: holder["sidx"],
+                           set_sidx=lambda x: holder.__setitem__("sidx", x),
+                           clock=lambda: t["now"], **kw)
+    return ctl, reg, holder, t
+
+
+def _assert_tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# Happy path: coverage restored, bit-identical, fully observable
+# ---------------------------------------------------------------------------
+
+
+def test_repair_restores_coverage_bit_identically(store, built):
+    m = MetricsRegistry()
+    ctl, reg, holder, t = _controller(store, built, metrics=m)
+    reg.mark_dead(1)
+    reg.mark_dead(3)
+    assert reg.coverage() == 0.5
+
+    out1 = ctl.sweep()                      # default budget: one per sweep
+    assert [o.status for o in out1] == ["succeeded"]
+    assert out1[0].shard == 1 and out1[0].attempt == 1
+    assert reg.coverage() == 0.75
+
+    out2 = ctl.sweep()
+    assert [(o.shard, o.status) for o in out2] == [(3, "succeeded")]
+    assert reg.coverage() == 1.0            # no operator mark_live anywhere
+
+    # the healed index is bit-identical to the original build …
+    _assert_tree_equal(holder["sidx"], built)
+    # … and the repaired slot is bit-identical to a from-scratch rebuild
+    fresh = store.build_shard(3)
+    slot = jax.tree.map(lambda x: x[3], holder["sidx"].index)
+    _assert_tree_equal(slot, fresh)
+
+    assert (ctl.n_repaired, ctl.n_failed, ctl.n_sweeps) == (2, 0, 2)
+    snap = snapshot(m)
+    assert snap["counters"]["repair_started_total"] == 2
+    assert snap["counters"]["repair_succeeded_total"] == 2
+    assert "repair_failed_total" not in snap["counters"]
+    assert snap["gauges"]['shard_under_repair{shard="1"}'] == 0.0
+    assert snap["gauges"]['shard_under_repair{shard="3"}'] == 0.0
+    assert snap["histograms"]["repair_duration_seconds"]["count"] == 2
+    names = [e["name"] for e in snap["events"]]
+    assert names.count("repair_started") == 2
+    assert names.count("repair_succeeded") == 2
+    done = [e for e in snap["events"] if e["name"] == "repair_succeeded"]
+    assert sorted(e["shard"] for e in done) == [1, 3]
+
+
+def test_repair_prioritizes_coverage_holes(store, corpus):
+    """A shard with NO live replica is repaired before a dead replica of a
+    covered shard — and with budget 1 the hole closes in sweep one."""
+    t_reg = {"now": 0.0}
+    reg = ShardHealthRegistry(S, n_replicas=2, clock=lambda: t_reg["now"])
+    rep = build_replicated(corpus, S, n_replicas=2, params=BP, seed=SEED)
+    ctl, reg, holder, t = _controller(store, rep, registry=reg)
+    reg.mark_dead(0, 0)                     # covered: (0, 1) still lives
+    reg.mark_dead(2, 0)                     # hole: both replicas dead
+    reg.mark_dead(2, 1)
+    assert reg.coverage() == 0.75
+    assert ctl.pending() == [(2, 0), (2, 1), (0, 0)]
+
+    out = ctl.sweep()
+    assert [(o.shard, o.replica) for o in out] == [(2, 0)]
+    assert reg.coverage() == 1.0            # hole closed first
+    ctl.sweep()
+    ctl.sweep()
+    assert ctl.pending() == []
+    _assert_tree_equal(holder["sidx"], rep)
+
+
+# ---------------------------------------------------------------------------
+# Contained failures: retry with exponential backoff, no regression
+# ---------------------------------------------------------------------------
+
+
+def test_rebuild_failures_back_off_and_retry(store, built):
+    m = MetricsRegistry()
+    plan = RepairFaultPlan(fail_rebuilds=2)
+    hook = plan.hook()
+    ctl, reg, holder, t = _controller(store, built, metrics=m,
+                                      fault_hook=hook)
+    reg.mark_dead(2)
+
+    out = ctl.sweep()                       # attempt 1 fails → backoff 0.5 s
+    assert [o.status for o in out] == ["failed"]
+    assert "RepairFault" in out[0].error
+    assert holder["sidx"] is built          # contained: index untouched
+    assert reg.coverage() == 0.75
+
+    t["now"] = 0.25
+    assert ctl.sweep() == []                # still inside the backoff window
+
+    t["now"] = 0.6
+    out = ctl.sweep()                       # attempt 2 fails → backoff 1.0 s
+    assert [o.attempt for o in out] == [2]
+    assert out[0].status == "failed"
+
+    t["now"] = 1.0
+    assert ctl.sweep() == []                # 0.6 + 1.0 > 1.0: still waiting
+
+    t["now"] = 2.0
+    out = ctl.sweep()
+    assert [(o.status, o.attempt) for o in out] == [("succeeded", 3)]
+    assert reg.coverage() == 1.0
+    _assert_tree_equal(holder["sidx"], built)
+    assert hook.visits["rebuild"] == 3
+    assert (ctl.n_repaired, ctl.n_failed) == (1, 2)
+    snap = snapshot(m)
+    assert snap["counters"]["repair_started_total"] == 3
+    assert snap["counters"]["repair_failed_total"] == 2
+    assert snap["counters"]["repair_succeeded_total"] == 1
+    fails = [e for e in snap["events"] if e["name"] == "repair_failed"]
+    assert [e["retry_in_s"] for e in fails] == [0.5, 1.0]
+
+
+def test_corrupted_source_fails_cleanly_then_recovers(tmp_path, corpus,
+                                                      built):
+    """Both corruption modes are caught by verify-on-read: the repair fails
+    (no install, no mask flip), and once the source is re-replicated the
+    same controller heals on the next eligible sweep."""
+    d = str(tmp_path / "store")
+    st = ShardVectorStore.create(d, corpus, S, params=BP, seed=SEED)
+    corrupt_shard_source(d, 1, mode="truncate")
+    corrupt_shard_source(d, 2, mode="checksum")
+
+    ctl, reg, holder, t = _controller(store=st, sidx=built,
+                                      config=RepairConfig(budget_per_sweep=2))
+    reg.mark_dead(1)
+    reg.mark_dead(2)
+    out = ctl.sweep()
+    assert [o.status for o in out] == ["failed", "failed"]
+    assert all("ShardSourceCorruptError" in o.error for o in out)
+    assert holder["sidx"] is built
+    assert reg.coverage() == 0.5
+    assert not reg._live[1, 0] and not reg._live[2, 0]
+
+    ShardVectorStore.create(d, corpus, S, params=BP, seed=SEED)  # re-replicate
+    t["now"] = 10.0                          # past both backoff windows
+    out = ctl.sweep()
+    assert [o.status for o in out] == ["succeeded", "succeeded"]
+    assert reg.coverage() == 1.0
+    _assert_tree_equal(holder["sidx"], built)
+
+
+# ---------------------------------------------------------------------------
+# Install crashes: the atomic-install rule
+# ---------------------------------------------------------------------------
+
+
+def test_crash_before_install_leaves_index_and_mask_untouched(store, built):
+    hook = RepairFaultPlan(crash_point="before_install").hook()
+    ctl, reg, holder, t = _controller(store, built, fault_hook=hook)
+    reg.mark_dead(2)
+    with pytest.raises(SimulatedCrash):
+        ctl.sweep()
+    assert holder["sidx"] is built          # nothing installed
+    assert not reg._live[2, 0]              # mask never flipped
+    assert reg.coverage() == 0.75
+
+    # "process restart": a fresh controller over the same state heals
+    ctl2, _, _, _ = _controller(store, holder["sidx"], registry=reg)
+    out = ctl2.sweep()
+    assert [o.status for o in out] == ["succeeded"]
+    assert reg.coverage() == 1.0
+
+
+def test_crash_mid_install_never_flips_participation_mask(store, built):
+    """The verified index may land (install is one atomic pytree swap) but
+    the mask flips only AFTER it — dying between the two leaves a dead
+    slot serving nothing, never a live slot serving an unverified one."""
+    hook = RepairFaultPlan(crash_point="mid_install").hook()
+    ctl, reg, holder, t = _controller(store, built, fault_hook=hook)
+    reg.mark_dead(2)
+    with pytest.raises(SimulatedCrash):
+        ctl.sweep()
+    assert not reg._live[2, 0]              # the acceptance claim
+    assert reg.coverage() == 0.75
+    _assert_tree_equal(holder["sidx"], built)   # what landed was verified
+
+    ctl2, _, holder2, _ = _controller(store, holder["sidx"], registry=reg)
+    out = ctl2.sweep()
+    assert [o.status for o in out] == ["succeeded"]
+    assert reg.coverage() == 1.0
+    _assert_tree_equal(holder2["sidx"], built)
+
+
+def test_crash_after_install_is_fully_recovered(store, built):
+    """Dying after ``mark_live`` is the benign case: the repair completed;
+    a restarted controller finds nothing to do."""
+    hook = RepairFaultPlan(crash_point="after_install").hook()
+    ctl, reg, holder, t = _controller(store, built, fault_hook=hook)
+    reg.mark_dead(3)
+    with pytest.raises(SimulatedCrash):
+        ctl.sweep()
+    assert reg.coverage() == 1.0
+    _assert_tree_equal(holder["sidx"], built)
+    ctl2, _, _, _ = _controller(store, holder["sidx"], registry=reg)
+    assert ctl2.pending() == []
+    assert ctl2.sweep() == []
+
+
+# ---------------------------------------------------------------------------
+# Verification gate and plan/controller validation
+# ---------------------------------------------------------------------------
+
+
+def test_audit_gate_rejects_defective_rebuild(store, built, monkeypatch):
+    """A rebuild that produces a defective graph (one node orphaned — no
+    in-edges, so unreachable from the medoid) must be rejected by the
+    audit gate: the repair fails, nothing installs, the mask stays down.
+    Once rebuilds are healthy again the same controller heals."""
+    import dataclasses as dc
+
+    import jax.numpy as jnp
+
+    import repro.core.repair as repair_mod
+
+    def sabotaged_build(rows, shard, params=None, quantized=False, seed=0):
+        g = build_shard(rows, shard, params, quantized, seed)
+        victim = (int(g.medoid) + 1) % g.n
+        nbrs = np.asarray(g.neighbors).copy()
+        nbrs[nbrs == victim] = -1           # orphan: no path can reach it
+        return dc.replace(g, neighbors=jnp.asarray(nbrs))
+
+    monkeypatch.setattr(repair_mod, "build_shard", sabotaged_build)
+    ctl, reg, holder, t = _controller(store, built)
+    reg.mark_dead(2)
+    out = ctl.sweep()
+    assert [o.status for o in out] == ["failed"]
+    assert "RepairError" in out[0].error and "audit" in out[0].error
+    assert holder["sidx"] is built          # nothing installed
+    assert not reg._live[2, 0]              # mask never flipped
+
+    monkeypatch.undo()                      # rebuilds are healthy again
+    t["now"] = 10.0                         # past the backoff window
+    out = ctl.sweep()
+    assert [o.status for o in out] == ["succeeded"]
+    assert reg.coverage() == 1.0
+    _assert_tree_equal(holder["sidx"], built)
+
+
+def test_repair_plan_and_controller_validation(store, built, corpus,
+                                               tmp_path):
+    with pytest.raises(ValueError, match="crash_point"):
+        RepairFaultPlan(crash_point="rebuild")      # contained phase: no-op
+    with pytest.raises(ValueError, match="shards"):
+        st2 = ShardVectorStore.create(str(tmp_path / "s2"), corpus, 2,
+                                      params=BP, seed=SEED)
+        RepairController(st2, ShardHealthRegistry(S),
+                         get_sidx=lambda: built, set_sidx=lambda _: None)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end chaos: kill shards under load, auto-repair heals the server
+# ---------------------------------------------------------------------------
+
+_PREAMBLE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n}"
+import sys; sys.path.insert(0, "src")
+import numpy as np, jax, jax.numpy as jnp
+"""
+
+
+def _run(body: str, n_devices: int = 4, timeout: int = 560) -> str:
+    code = _PREAMBLE.format(n=n_devices) + body
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=timeout, cwd="/root/repo")
+    assert proc.returncode == 0, \
+        f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr[-3000:]}"
+    return proc.stdout
+
+
+def test_chaos_shard_deaths_self_heal_under_load():
+    """Heartbeat silence kills two shards mid-stream; the server's repair
+    sweep (after the health check, before dispatch) restores coverage to
+    1.0 with ZERO operator calls.  Post-repair responses are bit-identical
+    to the healthy baseline AND to the host reference oracle, the healed
+    index is bit-identical to a from-scratch rebuild, and every response
+    along the way — including the degraded one — honors the paper's (1/δ)
+    bound on the rows it could see."""
+    out = _run("""
+import os, tempfile
+from repro.core import BuildParams, SearchParams
+from repro.core.distributed import build_sharded, host_reference_merge
+from repro.core.repair import RepairConfig, ShardVectorStore
+from repro.obs import MetricsRegistry, snapshot
+from repro.serve import ResilienceConfig, ShardedResilientAnnServer
+from repro.testing import check_delta_bound, exact_knn
+
+seed = int(os.environ.get("REPRO_FAULT_SEED", "0"))
+rng = np.random.default_rng(seed)
+DELTA = 0.5
+# dim 8 + these build params give audit-clean shards for every fault seed
+# in the CI matrix — the repair gate must judge rebuilds repairable, and a
+# graph the gate would reject can never self-heal (by design: the gate is
+# exactly as strict for a rebuild as verify.audit is for a fresh build)
+X = rng.standard_normal(size=(512, 8)).astype(np.float32)  # 4*128: no pads
+Q = rng.standard_normal(size=(12, 8)).astype(np.float32)
+bp = BuildParams(max_degree=12, beam_width=24, t=10, iters=3, block=128,
+                 delta=DELTA)
+mesh = jax.make_mesh((4,), ("data",))
+sidx = build_sharded(X, 4, bp, seed=7)
+store_dir = tempfile.mkdtemp()
+store = ShardVectorStore.create(store_dir, X, 4, params=bp, seed=7)
+params = SearchParams(k=5, l0=16, l_max=32, adaptive=False, max_hops=256,
+                      beam_width=1)
+t = {"now": 0.0}
+m = MetricsRegistry()
+srv = ShardedResilientAnnServer(sidx, params, mesh,
+                                config=ResilienceConfig(backoff_s=0.0),
+                                clock=lambda: t["now"],
+                                health_deadline_s=5.0, metrics=m,
+                                auto_repair=RepairConfig(budget_per_sweep=1),
+                                vector_store=store)
+
+def ids_dists(rs):
+    return (np.stack([np.asarray(r.ids) for r in rs]),
+            np.stack([np.asarray(r.dists) for r in rs]))
+
+srv.submit_many(Q)                          # stage 1: healthy baseline
+rs0 = srv.drain()
+assert all(r.ok and r.coverage == 1.0 for r in rs0)
+base_ids, base_d = ids_dists(rs0)
+
+t["now"] = 4.0                              # shards 1, 2 go silent …
+for s in (0, 3):
+    srv.heartbeat(s)
+t["now"] = 7.0                              # … and age past the deadline
+
+srv.submit_many(Q)                          # stage 2: checker kills both,
+rs1 = srv.drain()                           # budget-1 sweep repairs ONE
+assert srv.health_checker.n_killed == 2
+assert all(r.ok and abs(r.coverage - 3/4) < 1e-9 for r in rs1)
+
+srv.submit_many(Q)                          # stage 3: second sweep heals
+rs2 = srv.drain()                           # the other shard
+assert all(r.ok and r.coverage == 1.0 for r in rs2)
+assert srv.repair.n_repaired == 2           # no revive_shard was ever called
+snap = snapshot(m)
+assert snap["counters"]["repair_succeeded_total"] == 2
+assert snap["counters"]["shard_marked_dead_total"] == 2
+
+# healed responses are bit-identical to the healthy baseline …
+ids2, d2 = ids_dists(rs2)
+assert np.array_equal(ids2, base_ids) and np.array_equal(d2, base_d)
+# … and to the host reference oracle over the healed index
+hr_ids, hr_d = host_reference_merge(srv.index, srv.registry, Q, params)
+assert np.array_equal(ids2, np.asarray(hr_ids))
+
+# the healed index is bit-identical to a from-scratch rebuild
+fresh = build_sharded(X, 4, bp, seed=7)
+for a, b in zip(jax.tree.leaves(srv.index), jax.tree.leaves(fresh)):
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+# Theorem-1 (1/δ) bound: healthy stages against the full corpus; the
+# degraded stage against the corpus it could actually see.  The repair
+# queue is hole-first then by shard id, so shard 1 heals in stage 2 and
+# shard 2 (global rows [256, 384)) is the one still dark there.
+orc_d, _ = exact_knn(X, Q, 5)
+assert check_delta_bound(base_d, orc_d, DELTA) is None
+assert check_delta_bound(d2, orc_d, DELTA) is None
+ids1, d1 = ids_dists(rs1)
+assert not ((ids1 >= 256) & (ids1 < 384)).any()   # dead rows never served
+visible = np.ones(512, bool)
+visible[256:384] = False
+orc1_d, _ = exact_knn(X[visible], Q, 5)
+assert check_delta_bound(d1, orc1_d, DELTA) is None
+print("OK")
+""")
+    assert "OK" in out
